@@ -1,0 +1,80 @@
+"""Table 1 / Figure 6 reproduction: STA, DAE, SPEC, ORACLE cycle counts,
+mis-speculation rates, poison block/call counts, and a code-size proxy for
+the paper's ALM area (CU+AGU instruction & block counts).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+import numpy as np
+
+from repro.bench_irregular import ALL
+from repro.core import pipeline
+from repro.core.machine import MachineConfig
+
+
+def code_size(fn) -> int:
+    return sum(len(b.phis) + len(b.body) + 1 for b in fn.blocks.values())
+
+
+def run_one(name: str, cfg: MachineConfig = None) -> Dict:
+    case = ALL[name]()
+    runs = pipeline.run_all(case.fn, case.decoupled, case.memory,
+                            params=case.params, cfg=cfg)
+    ref = runs["ref"].memory
+    for v in ("sta", "dae", "spec"):
+        for k in ref:
+            assert np.array_equal(runs[v].memory[k], ref[k]), \
+                f"{name}/{v}: memory diverges from sequential reference"
+    spec = runs["spec"]
+    comp = spec.compiled
+    row = {
+        "bench": name,
+        "note": case.note,
+        "sta": runs["sta"].cycles,
+        "dae": runs["dae"].cycles,
+        "spec": spec.cycles,
+        "oracle": runs["oracle"].cycles,
+        "speedup_spec_vs_sta": round(runs["sta"].cycles / spec.cycles, 2),
+        "slowdown_dae_vs_sta": round(runs["sta"].cycles / runs["dae"].cycles, 2),
+        "spec_vs_oracle": round(spec.cycles / runs["oracle"].cycles, 3),
+        "misspec_rate": round(spec.result.misspec_rate, 3),
+        "poison_blocks": comp.poison_stats.poison_blocks,
+        "poison_calls": comp.poison_stats.poison_calls,
+        "merged_blocks": comp.poison_stats.merged_blocks,
+        "size_sta": code_size(case.fn),
+        "size_spec": code_size(comp.agu) + code_size(comp.cu),
+        "spec_requests": comp.spec.spec_requests,
+        "fallbacks": len(comp.spec.fallback),
+    }
+    return row
+
+
+def main(out_json: str = None):
+    rows = [run_one(n) for n in ALL]
+    hdr = (f"{'bench':6s} {'STA':>8s} {'DAE':>8s} {'SPEC':>8s} {'ORACLE':>8s} "
+           f"{'SPECvSTA':>9s} {'SPEC/ORC':>9s} {'mis%':>6s} {'pB':>3s} {'pC':>3s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['bench']:6s} {r['sta']:8d} {r['dae']:8d} {r['spec']:8d} "
+              f"{r['oracle']:8d} {r['speedup_spec_vs_sta']:8.2f}x "
+              f"{r['spec_vs_oracle']:9.3f} {100*r['misspec_rate']:5.1f}% "
+              f"{r['poison_blocks']:3d} {r['poison_calls']:3d}")
+    import math
+    hm = lambda xs: len(xs) / sum(1.0 / x for x in xs)
+    sta = [r["sta"] for r in rows]
+    print(f"\nharmonic-mean speedups vs STA:  "
+          f"DAE={hm([r['sta']/r['dae'] for r in rows]):.2f}x  "
+          f"SPEC={hm([r['sta']/r['spec'] for r in rows]):.2f}x  "
+          f"ORACLE={hm([r['sta']/r['oracle'] for r in rows]):.2f}x")
+    print("paper (Table 1):                DAE=0.31x  SPEC=1.96x  ORACLE=2.08x")
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(rows, fh, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

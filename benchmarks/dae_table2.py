@@ -1,0 +1,43 @@
+"""Table 2 reproduction: SPEC cycle count as the mis-speculation rate varies
+(hist, thr, mm with instrumented inputs).  The paper's claim: no correlation
+between mis-speculation rate and cycles (σ small relative to the mean).
+"""
+from __future__ import annotations
+
+import statistics
+from typing import Dict, List
+
+from repro.bench_irregular import hist, thr, mm
+from repro.core import pipeline
+
+RATES = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0]
+
+BUILDERS = {
+    "hist": lambda r: hist.build(true_rate=1.0 - r),
+    "thr": lambda r: thr.build(true_rate=1.0 - r),
+    "mm": lambda r: mm.build(true_rate=1.0 - r),
+}
+
+
+def main() -> Dict[str, List[int]]:
+    out: Dict[str, List[int]] = {}
+    print(f"{'kernel':6s} " + " ".join(f"{int(100*r):>6d}%" for r in RATES)
+          + f" {'sigma':>7s}")
+    for name, build in BUILDERS.items():
+        cycles = []
+        for r in RATES:
+            case = build(r)
+            runs = pipeline.run_all(case.fn, case.decoupled, case.memory,
+                                    variants=("spec",))
+            cycles.append(runs["spec"].cycles)
+        sigma = statistics.pstdev(cycles)
+        out[name] = cycles
+        print(f"{name:6s} " + " ".join(f"{c:>7d}" for c in cycles)
+              + f" {sigma:7.1f}")
+    print("\npaper (Table 2): sigma 21 cycles on ~1100 (thr), 18 on ~4100 (mm)"
+          " — rate-insensitive")
+    return out
+
+
+if __name__ == "__main__":
+    main()

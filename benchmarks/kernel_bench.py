@@ -1,0 +1,77 @@
+"""Kernel micro-benches: Pallas (interpret) vs jnp reference — correctness
+plus wall-time of the *jnp path* (what a CPU run executes; interpret-mode
+timing is not meaningful perf).  On TPU the Pallas path takes over.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ragged_matmul import ragged_matmul
+from repro.kernels.spec_gather import spec_gather
+from repro.kernels.spec_scatter import spec_scatter_add
+
+
+def _t(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main() -> str:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    table = jnp.asarray(rng.normal(size=(1024, 512)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(-8, 1024, 256).astype(np.int32))
+    ok = np.allclose(spec_gather(table, idx), ref.spec_gather(table, idx))
+    rows.append(("spec_gather", _t(jax.jit(ref.spec_gather), table, idx), ok))
+
+    vals = jnp.asarray(rng.normal(size=(256, 512)).astype(np.float32))
+    ok = np.allclose(spec_scatter_add(table, idx, vals),
+                     ref.spec_scatter_add(table, idx, vals), atol=1e-4)
+    rows.append(("spec_scatter_add",
+                 _t(jax.jit(ref.spec_scatter_add), table, idx, vals), ok))
+
+    e, c, d, f = 8, 128, 256, 512
+    x = jnp.asarray(rng.normal(size=(e * c, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32))
+    ok = np.allclose(ragged_matmul(x, w, capacity=c),
+                     ref.ragged_matmul(x, w, c), atol=1e-2)
+    rows.append(("ragged_matmul",
+                 _t(jax.jit(lambda x, w: ref.ragged_matmul(x, w, c)), x, w),
+                 ok))
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 512, 64)).astype(np.float32))
+    ok = np.allclose(flash_attention(q, q, q, causal=True),
+                     ref.flash_attention(q, q, q, causal=True), atol=2e-3)
+    rows.append(("flash_attention",
+                 _t(jax.jit(lambda q: ref.flash_attention(q, q, q)), q), ok))
+
+    qd = jnp.asarray(rng.normal(size=(4, 8, 64)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(64, 16, 8, 64)).astype(np.float32))
+    pt = jnp.asarray(rng.integers(0, 64, (4, 8)).astype(np.int32))
+    sl = jnp.asarray(np.full(4, 100, np.int32))
+    ok = np.allclose(paged_attention(qd, kp, kp, pt, sl),
+                     ref.paged_attention(qd, kp, kp, pt, sl), atol=2e-3)
+    rows.append(("paged_attention",
+                 _t(jax.jit(ref.paged_attention), qd, kp, kp, pt, sl), ok))
+
+    print(f"{'kernel':18s} {'jnp_us':>10s} {'pallas_ok':>9s}")
+    all_ok = True
+    for name, us, ok in rows:
+        all_ok &= ok
+        print(f"{name:18s} {us:10.0f} {str(ok):>9s}")
+    return f"all_kernels_match={all_ok}"
+
+
+if __name__ == "__main__":
+    main()

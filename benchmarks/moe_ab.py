@@ -1,0 +1,79 @@
+"""A/B: speculative MoE dispatch (the paper's technique) vs the dense
+if-converted baseline, inside the framework — FLOPs and wall-time on the
+smoke config, plus the capacity/mis-spec sweep (the MoE Table-2 analogue).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get, smoke
+from repro.models import moe
+from repro.models.model import build_model
+
+
+def _time(fn, *args, n=10):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e3
+
+
+def main() -> str:
+    cfg = smoke(get("kimi_k2_1t_a32b"))
+    key = jax.random.PRNGKey(0)
+    n = 512
+    x = jax.random.normal(key, (n, cfg.d_model), jnp.float32)
+    params = jax.tree.map(lambda a: a[0],
+                          build_model(cfg).init(key)["groups"])["s1_moe"]
+
+    spec = jax.jit(lambda p, x: moe.moe_spec(
+        p, x, n_experts=cfg.n_experts, top_k=cfg.top_k,
+        capacity_factor=1.25))
+    dense = jax.jit(lambda p, x: moe.moe_dense(
+        p, x, n_experts=cfg.n_experts, top_k=cfg.top_k))
+
+    t_spec = _time(spec, params, x)
+    t_dense = _time(dense, params, x)
+    # flop accounting: dense runs all E experts; spec runs capacity buffers
+    cap = moe.round_capacity(n, cfg.n_experts, cfg.top_k, 1.25)
+    ff = cfg.moe_d_ff or cfg.d_ff
+    fl_dense = 2 * 3 * n * cfg.n_experts * cfg.d_model * ff
+    fl_spec = 2 * 3 * cfg.n_experts * cap * cfg.d_model * ff
+    print(f"tokens={n} experts={cfg.n_experts} top_k={cfg.top_k} "
+          f"capacity={cap}")
+    print(f"dense (if-converted, STA analogue): {t_dense:8.2f} ms  "
+          f"flops={fl_dense / 1e9:.2f} G")
+    print(f"spec  (capacity+poison, paper)    : {t_spec:8.2f} ms  "
+          f"flops={fl_spec / 1e9:.2f} G")
+    print(f"flop ratio dense/spec = {fl_dense / fl_spec:.2f}x "
+          f"(ideal E/(top_k*cf) = "
+          f"{cfg.n_experts / (cfg.top_k * 1.25):.2f}x)")
+
+    # mis-spec sweep: step time must be ~flat (the MoE Table-2 analogue)
+    print(f"\n{'cap_factor':>10s} {'misspec%':>9s} {'ms':>8s}")
+    times = []
+    for cf in (2.0, 1.0, 0.5, 0.25):
+        f = jax.jit(lambda p, x: moe.moe_spec(
+            p, x, n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cf))
+        t = _time(f, params, x)
+        capacity = moe.round_capacity(n, cfg.n_experts, cfg.top_k, cf)
+        gates, experts = jax.lax.top_k(jax.nn.softmax(
+            x @ params["router"], axis=-1), cfg.top_k)
+        slot, _ = moe.spec_dispatch_indices(gates, experts, capacity,
+                                            cfg.n_experts)
+        mis = float(jnp.mean(slot < 0))
+        times.append(t)
+        print(f"{cf:10.2f} {100 * mis:8.1f}% {t:8.2f}")
+    flat = max(times) / max(min(times), 1e-9)
+    return (f"dense/spec_flops={fl_dense / fl_spec:.2f}x,"
+            f"misspec_time_spread={flat:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Roofline summary over the dry-run artifacts (reads results/dryrun/)."""
+from repro.launch import roofline
+
+
+def main() -> str:
+    return roofline.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""The paper's technique inside the LM framework: speculative MoE dispatch
+(capacity + poison) vs the dense if-converted baseline.
+
+    PYTHONPATH=src python examples/dae_speculation_demo.py
+
+Shows: (1) outputs agree when capacity is ample (no mis-speculation);
+(2) FLOPs: dense path computes E/top_k× more; (3) the mis-speculation
+(token-drop) rate as capacity shrinks — with step cost flat, the MoE
+Table-2 analogue.
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get, smoke
+from repro.models import moe
+from repro.models.model import build_model
+
+
+def main():
+    cfg = smoke(get("kimi_k2_1t_a32b"))
+    key = jax.random.PRNGKey(0)
+    n, d = 256, cfg.d_model
+    x = jax.random.normal(key, (n, d), jnp.float32)
+
+    params = build_model(cfg).init(key)["groups"]
+    p_moe = jax.tree.map(lambda a: a[0], params)["s1_moe"]
+
+    print(f"experts={cfg.n_experts} top_k={cfg.top_k} tokens={n}\n")
+    print(f"{'capacity_factor':>15s} {'misspec%':>9s} {'|out|':>10s} "
+          f"{'step_ms':>8s}")
+    for cap in (8.0, 2.0, 1.25, 1.0, 0.5, 0.25):
+        fn = jax.jit(lambda p, x: moe.moe_spec(
+            p, x, n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cap))
+        out = fn(p_moe, x)
+        t0 = time.perf_counter()
+        for _ in range(10):
+            out = fn(p_moe, x).block_until_ready()
+        dt = (time.perf_counter() - t0) / 10 * 1e3
+
+        capacity = moe.round_capacity(n, cfg.n_experts, cfg.top_k, cap)
+        gates, experts = jax.lax.top_k(jax.nn.softmax(
+            x @ p_moe["router"], axis=-1), cfg.top_k)
+        slot, _ = moe.spec_dispatch_indices(gates, experts, capacity,
+                                            cfg.n_experts)
+        mis = float(jnp.mean(slot < 0))
+        print(f"{cap:15.2f} {100 * mis:8.1f}% {float(jnp.abs(out).mean()):10.4f}"
+              f" {dt:8.2f}")
+
+    dense = jax.jit(lambda p, x: moe.moe_dense(
+        p, x, n_experts=cfg.n_experts, top_k=cfg.top_k))
+    spec = jax.jit(lambda p, x: moe.moe_spec(
+        p, x, n_experts=cfg.n_experts, top_k=cfg.top_k,
+        capacity_factor=float(cfg.n_experts)))
+    d_out, s_out = dense(p_moe, x), spec(p_moe, x)
+    err = float(jnp.max(jnp.abs(d_out - s_out)))
+    print(f"\nample capacity: |spec - dense|_max = {err:.2e} "
+          f"(no mis-speculation → identical, Lemma 6.1's analogue)")
+    print(f"dense baseline computes {cfg.n_experts}/{cfg.top_k} = "
+          f"{cfg.n_experts // cfg.top_k}x the expert FLOPs of dispatch")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Quickstart: the paper's pipeline end to end on the Fig.-1b example.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the `if (A[i] > 0) A[idx[i]] += 1` loop in the DAE IR, compiles all
+four architectures (STA / DAE / SPEC / ORACLE), simulates them, and checks
+sequential consistency.
+"""
+import numpy as np
+
+from repro.core import pipeline
+from repro.core.ir import Function
+
+
+def build(N=256):
+    f = Function("quickstart")
+    f.array("A", N)
+    f.array("idx", N)
+    e = f.block("entry")
+    e.const("zero", 0); e.const("one", 1); e.const("N", N); e.br("header")
+    h = f.block("header")
+    h.phi("i", [("entry", "zero"), ("latch", "i_next")])
+    h.bin("c", "<", "i", "N"); h.cbr("c", "body", "exit")
+    b = f.block("body")
+    b.load("a", "A", "i")
+    b.bin("p", ">", "a", "zero")
+    b.cbr("p", "then", "latch")
+    t = f.block("then")
+    t.load("j", "idx", "i")
+    t.load("x", "A", "j")
+    t.bin("x1", "+", "x", "one")
+    t.store("A", "j", "x1")
+    t.br("latch")
+    l = f.block("latch")
+    l.bin("i_next", "+", "i", "one"); l.br("header")
+    f.block("exit").ret()
+    f.verify()
+    return f
+
+
+def main():
+    rng = np.random.default_rng(0)
+    N = 256
+    fn = build(N)
+    mem = {"A": rng.integers(-3, 10, N).astype(np.int64),
+           "idx": rng.integers(0, N, N).astype(np.int64)}
+
+    runs = pipeline.run_all(fn, {"A"}, mem)
+    sta = runs["sta"].cycles
+    print(f"{'variant':8s} {'cycles':>8s} {'vs STA':>8s}")
+    for name in ("sta", "dae", "spec", "oracle"):
+        r = runs[name]
+        print(f"{name:8s} {r.cycles:8d} {sta / r.cycles:7.2f}x")
+
+    ref = runs["ref"].memory
+    for name in ("sta", "dae", "spec"):
+        ok = all(np.array_equal(runs[name].memory[k], ref[k]) for k in ref)
+        print(f"{name}: sequentially consistent = {ok}")
+        assert ok
+
+    comp = runs["spec"].compiled
+    print(f"\nSPEC AGU (decoupled — no branch, fire-and-forget requests):")
+    print(comp.agu.dump())
+    print(f"\nmis-speculation rate: {runs['spec'].result.misspec_rate:.1%} "
+          f"(zero extra cost — Table 2)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""hist — histogram with saturation, the paper's Fig.-1b shape (§8.1.2).
+
+    for i in range(N):
+        b = bins[i]
+        h = H[b]
+        if h < MAX:
+            H[b] = h + w[i]
+
+The branch reads a decoupled load (H[b]); the store to H is control-dependent
+on it — a textbook control LoD.  ``true_rate`` instruments the data so the
+branch (and hence the mis-speculation rate) is tunable for Table 2.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.ir import Function
+
+
+def build(n: int = 256, n_bins: int = 32, max_count: int = 1 << 30,
+          true_rate: float = 0.98, seed: int = 0):
+    from . import BenchCase
+
+    rng = np.random.default_rng(seed)
+    f = Function("hist")
+    f.array("H", n_bins)
+    f.array("bins", n)
+    f.array("w", n)
+
+    e = f.block("entry")
+    e.const("zero", 0)
+    e.const("one", 1)
+    e.const("N", n)
+    e.const("MAX", max_count)
+    e.br("header")
+    h = f.block("header")
+    h.phi("i", [("entry", "zero"), ("latch", "i_next")])
+    h.bin("c", "<", "i", "N")
+    h.cbr("c", "body", "exit")
+    b = f.block("body")
+    b.load("b", "bins", "i")
+    b.load("hv", "H", "b")
+    b.bin("p", "<", "hv", "MAX")
+    b.cbr("p", "then", "latch")
+    t = f.block("then")
+    t.load("wv", "w", "i")
+    t.bin("h1", "+", "hv", "wv")
+    t.store("H", "b", "h1")
+    t.br("latch")
+    l = f.block("latch")
+    l.bin("i_next", "+", "i", "one")
+    l.br("header")
+    f.block("exit").ret()
+    f.verify()
+
+    # true_rate controls how often the branch is taken: saturate a fraction
+    # of bins at MAX so their updates mis-speculate.
+    hot = rng.random(n_bins) >= true_rate
+    H0 = np.where(hot, max_count, 0).astype(np.int64)
+    mem = {
+        "H": H0,
+        "bins": rng.integers(0, n_bins, n).astype(np.int64),
+        "w": rng.integers(1, 5, n).astype(np.int64),
+    }
+    return BenchCase("hist", f, mem, {"H"},
+                     note=f"N={n} bins={n_bins} true_rate={true_rate}")

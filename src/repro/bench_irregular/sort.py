@@ -1,0 +1,81 @@
+"""sort — bitonic mergesort (§8.1.2, size 64).
+
+The bitonic network's compare-exchange pairs (lo, hi, dir) are precomputed
+into read-only arrays (the network is static); the kernel walks them:
+
+    for t in range(P):
+        x = a[lo[t]]; y = a[hi[t]]
+        if (x > y) == dir[t]:
+            a[lo[t]] = y; a[hi[t]] = x
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.ir import Function
+
+
+def _bitonic_pairs(n: int):
+    pairs = []
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            for i in range(n):
+                l = i ^ j
+                if l > i:
+                    asc = (i & k) == 0
+                    pairs.append((i, l, 1 if asc else 0))
+            j //= 2
+        k *= 2
+    return pairs
+
+
+def build(n: int = 64, seed: int = 0):
+    from . import BenchCase
+
+    rng = np.random.default_rng(seed)
+    pairs = _bitonic_pairs(n)
+    P = len(pairs)
+
+    f = Function("sort")
+    f.array("a", n)
+    f.array("lo", P)
+    f.array("hi", P)
+    f.array("dir", P)
+
+    e = f.block("entry")
+    e.const("zero", 0)
+    e.const("one", 1)
+    e.const("P", P)
+    e.br("header")
+    h = f.block("header")
+    h.phi("t", [("entry", "zero"), ("latch", "t_next")])
+    h.bin("c", "<", "t", "P")
+    h.cbr("c", "body", "exit")
+    b = f.block("body")
+    b.load("il", "lo", "t")
+    b.load("ih", "hi", "t")
+    b.load("x", "a", "il")
+    b.load("y", "a", "ih")
+    b.load("dd", "dir", "t")
+    b.bin("gt", ">", "x", "y")
+    b.bin("p", "==", "gt", "dd")
+    b.cbr("p", "swap", "latch")
+    s = f.block("swap")
+    s.store("a", "il", "y")
+    s.store("a", "ih", "x")
+    s.br("latch")
+    l = f.block("latch")
+    l.bin("t_next", "+", "t", "one")
+    l.br("header")
+    f.block("exit").ret()
+    f.verify()
+
+    mem = {
+        "a": rng.integers(0, 1000, n).astype(np.int64),
+        "lo": np.array([p[0] for p in pairs], dtype=np.int64),
+        "hi": np.array([p[1] for p in pairs], dtype=np.int64),
+        "dir": np.array([p[2] for p in pairs], dtype=np.int64),
+    }
+    return BenchCase("sort", f, mem, {"a"}, note=f"n={n} pairs={P}")

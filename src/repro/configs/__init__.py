@@ -1,0 +1,1 @@
+from .base import ASSIGNED, ArchConfig, get, param_count, smoke  # noqa: F401

@@ -1,0 +1,294 @@
+"""SSA-style mini-IR for the DAE speculation compiler (paper §3.2).
+
+The IR models loop nests over named arrays — the domain of the paper's
+benchmarks (graph/data analytics kernels).  It is deliberately small:
+
+  * values are named virtual registers, defined once (SSA-ish; we relax strict
+    dominance for transformation-inserted defs, see DESIGN.md §8),
+  * ``phi`` nodes live at block heads and select on the *dynamic* predecessor,
+  * memory is a set of named arrays; ``load``/``store`` address them by index,
+  * each block ends in exactly one terminator: ``br``/``cbr``/``ret``,
+  * decoupled (DAE) communication ops — ``send_ld``/``consume_ld``/
+    ``send_st``/``produce_st``/``poison_st`` — are first-class so that the
+    AGU/CU slices produced by :mod:`repro.core.decouple` are themselves
+    ordinary IR functions, and the speculation/poisoning transforms
+    (:mod:`repro.core.speculation`, :mod:`repro.core.poison`) are IR→IR.
+
+``setreg``/``getreg`` provide mutable per-iteration steering flags — the
+operational equivalent of Algorithm 3's ``phi(1, specBB)`` web (one flag per
+speculation block, reset each iteration); see DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Instructions
+# ---------------------------------------------------------------------------
+
+#: ops with a side effect on memory or a FIFO (never dead-code eliminated).
+EFFECT_OPS = frozenset({
+    "store", "send_ld", "consume_ld", "send_st", "produce_st", "poison_st",
+    "setreg", "print",
+})
+
+#: ops that reference a named array.
+MEMORY_OPS = frozenset({
+    "load", "store", "send_ld", "consume_ld", "send_st", "produce_st",
+    "poison_st",
+})
+
+#: AGU-side request ops (the paper's ``send_ld_addr`` / ``send_st_addr``).
+REQUEST_OPS = frozenset({"send_ld", "send_st"})
+
+
+@dataclass
+class Instr:
+    """One IR instruction.
+
+    op/args conventions::
+
+        const   dest = literal(args[0])
+        bin     dest = args[0] <op args[1]> args[2]      (args[1:] are names)
+        select  dest = args[1] if args[0] else args[2]
+        phi     dest = select on dynamic predecessor; args = ((pred, name), ...)
+        load    dest = array[args[0]]
+        store   array[args[0]] = args[1]
+        send_ld   AGU: request load  of array[args[0]]; meta['sync'] -> dest
+        send_st   AGU: request store of array[args[0]]
+        consume_ld  CU: dest = next load value of array (FIFO order)
+        produce_st  CU: send store value args[0] for array (FIFO order)
+        poison_st   CU: send poison token for array's next store request
+        setreg  reg[args[0]] = args[1] (name) or literal meta['imm']
+        getreg  dest = reg[args[0]]
+    """
+
+    op: str
+    dest: Optional[str] = None
+    args: Tuple[Any, ...] = ()
+    array: Optional[str] = None
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    # -- helpers -----------------------------------------------------------
+    def uses(self) -> Tuple[str, ...]:
+        """Names of SSA values this instruction reads."""
+        if self.op == "const":
+            return ()
+        if self.op == "bin":
+            return tuple(a for a in self.args[1:] if isinstance(a, str))
+        if self.op == "phi":
+            return tuple(v for (_, v) in self.args)
+        if self.op == "setreg":
+            return tuple(a for a in self.args[1:] if isinstance(a, str))
+        if self.op == "getreg":
+            return ()
+        return tuple(a for a in self.args if isinstance(a, str))
+
+    def is_effect(self) -> bool:
+        return self.op in EFFECT_OPS
+
+    def clone(self) -> "Instr":
+        return Instr(self.op, self.dest, tuple(self.args), self.array,
+                     copy.deepcopy(self.meta))
+
+    def __repr__(self) -> str:  # compact printing for dumps/tests
+        d = f"{self.dest} = " if self.dest else ""
+        a = f" @{self.array}" if self.array else ""
+        return f"{d}{self.op}{a} {list(self.args)}"
+
+
+# Terminators -----------------------------------------------------------------
+
+
+@dataclass
+class Term:
+    """Block terminator: ('br', tgt) | ('cbr', cond, t, f) | ('ret',)."""
+
+    kind: str
+    cond: Optional[str] = None
+    targets: Tuple[str, ...] = ()
+
+    @staticmethod
+    def br(tgt: str) -> "Term":
+        return Term("br", None, (tgt,))
+
+    @staticmethod
+    def cbr(cond: str, t: str, f: str) -> "Term":
+        return Term("cbr", cond, (t, f))
+
+    @staticmethod
+    def ret() -> "Term":
+        return Term("ret", None, ())
+
+    def succs(self) -> Tuple[str, ...]:
+        return self.targets
+
+    def retarget(self, old: str, new: str) -> None:
+        self.targets = tuple(new if t == old else t for t in self.targets)
+
+    def clone(self) -> "Term":
+        return Term(self.kind, self.cond, tuple(self.targets))
+
+    def __repr__(self) -> str:
+        if self.kind == "br":
+            return f"br {self.targets[0]}"
+        if self.kind == "cbr":
+            return f"cbr {self.cond} ? {self.targets[0]} : {self.targets[1]}"
+        return "ret"
+
+
+# ---------------------------------------------------------------------------
+# Blocks and functions
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Block:
+    name: str
+    phis: List[Instr] = field(default_factory=list)
+    body: List[Instr] = field(default_factory=list)
+    term: Optional[Term] = None
+    #: transform-inserted block (poison/steering): transparent for dynamic
+    #: phi-predecessor resolution in the interpreter and machine.
+    synthetic: bool = False
+
+    # -- builder sugar ------------------------------------------------------
+    def _emit(self, instr: Instr) -> Instr:
+        self.body.append(instr)
+        return instr
+
+    def const(self, dest: str, value: Any) -> str:
+        self._emit(Instr("const", dest, (value,)))
+        return dest
+
+    def bin(self, dest: str, op: str, a: str, b: str) -> str:
+        self._emit(Instr("bin", dest, (op, a, b)))
+        return dest
+
+    def select(self, dest: str, c: str, t: str, f: str) -> str:
+        self._emit(Instr("select", dest, (c, t, f)))
+        return dest
+
+    def phi(self, dest: str, incoming: List[Tuple[str, str]]) -> str:
+        self.phis.append(Instr("phi", dest, tuple(incoming)))
+        return dest
+
+    def load(self, dest: str, array: str, idx: str, **meta: Any) -> str:
+        self._emit(Instr("load", dest, (idx,), array, dict(meta)))
+        return dest
+
+    def store(self, array: str, idx: str, val: str, **meta: Any) -> None:
+        self._emit(Instr("store", None, (idx, val), array, dict(meta)))
+
+    def br(self, tgt: str) -> None:
+        self.term = Term.br(tgt)
+
+    def cbr(self, cond: str, t: str, f: str) -> None:
+        self.term = Term.cbr(cond, t, f)
+
+    def ret(self) -> None:
+        self.term = Term.ret()
+
+    def instructions(self) -> Iterator[Instr]:
+        yield from self.phis
+        yield from self.body
+
+    def __repr__(self) -> str:
+        lines = [f"{self.name}:"]
+        for i in self.instructions():
+            lines.append(f"  {i!r}")
+        lines.append(f"  {self.term!r}")
+        return "\n".join(lines)
+
+
+@dataclass
+class Function:
+    """A function: ordered blocks + declared arrays + integer params."""
+
+    name: str
+    params: Tuple[str, ...] = ()
+    blocks: Dict[str, Block] = field(default_factory=dict)
+    entry: str = "entry"
+    arrays: Dict[str, int] = field(default_factory=dict)  # name -> length
+
+    _uid: int = 0
+
+    # -- construction -------------------------------------------------------
+    def block(self, name: str) -> Block:
+        if name in self.blocks:
+            raise ValueError(f"duplicate block {name}")
+        b = Block(name)
+        self.blocks[name] = b
+        return b
+
+    def array(self, name: str, length: int) -> str:
+        self.arrays[name] = length
+        return name
+
+    def fresh(self, stem: str) -> str:
+        self._uid += 1
+        return f"{stem}.{self._uid}"
+
+    # -- queries -------------------------------------------------------------
+    def succs(self, b: str) -> Tuple[str, ...]:
+        return self.blocks[b].term.succs()
+
+    def preds_map(self) -> Dict[str, List[str]]:
+        preds: Dict[str, List[str]] = {b: [] for b in self.blocks}
+        for b, blk in self.blocks.items():
+            for s in blk.term.succs():
+                preds[s].append(b)
+        return preds
+
+    def verify(self) -> None:
+        """Structural sanity: terminators set, targets exist, defs unique."""
+        defs: Dict[str, str] = {}
+        for bname, blk in self.blocks.items():
+            if blk.term is None:
+                raise ValueError(f"block {bname} lacks a terminator")
+            for t in blk.term.succs():
+                if t not in self.blocks:
+                    raise ValueError(f"block {bname} targets unknown {t}")
+            for i in blk.instructions():
+                if i.dest is not None:
+                    if i.dest in defs and not i.meta.get("multi_def"):
+                        raise ValueError(
+                            f"{i.dest} defined in both {defs[i.dest]} and {bname}")
+                    defs[i.dest] = bname
+
+    def clone(self) -> "Function":
+        f = Function(self.name, tuple(self.params), {}, self.entry,
+                     dict(self.arrays))
+        f._uid = self._uid
+        for name, blk in self.blocks.items():
+            nb = Block(name, [i.clone() for i in blk.phis],
+                       [i.clone() for i in blk.body], blk.term.clone(),
+                       blk.synthetic)
+            f.blocks[name] = nb
+        return f
+
+    def dump(self) -> str:
+        hdr = f"func {self.name}({', '.join(self.params)}) " \
+              f"arrays={{{', '.join(f'{a}[{n}]' for a, n in self.arrays.items())}}}"
+        return "\n".join([hdr] + [repr(self.blocks[b]) for b in self.blocks])
+
+    # -- edits used by the transforms ----------------------------------------
+    def split_edge(self, src: str, dst: str, name: Optional[str] = None) -> Block:
+        """Insert a fresh empty block on the (src, dst) edge.
+
+        phi nodes in ``dst`` are re-pointed at the new block.
+        """
+        name = name or self.fresh(f"{src}_{dst}")
+        nb = self.block(name)
+        nb.br(dst)
+        self.blocks[src].term.retarget(dst, name)
+        for p in self.blocks[dst].phis:
+            p.args = tuple((name if blk == src else blk, v) for (blk, v) in p.args)
+        return nb
+
+    def retarget_phis(self, block: str, old_pred: str, new_pred: str) -> None:
+        for p in self.blocks[block].phis:
+            p.args = tuple((new_pred if blk == old_pred else blk, v)
+                           for (blk, v) in p.args)

@@ -1,0 +1,164 @@
+"""Random reducible loop programs for property-testing the §5/§6 transforms.
+
+Generates single-loop functions with nested conditional trees (depth ≤ 3) in
+the paper's benchmark family: decoupled-array loads feeding branch conditions
+(control LoD), stores under those branches, read-only index arrays, mixed
+tainted/untainted predicates.  Every program is valid input for the full
+STA/DAE/SPEC/ORACLE pipeline; the executable Lemma 6.1 property is that
+SPEC's committed store sequence and final memory equal the sequential
+interpreter's.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from .ir import Block, Function
+
+
+@dataclass
+class GenProgram:
+    fn: Function
+    memory: Dict[str, np.ndarray]
+    decoupled: Set[str]
+    n_requests: int = 0
+
+
+def generate(seed: int, n_iter: int = 48, max_depth: int = 3,
+             max_items: int = 3) -> GenProgram:
+    rng = np.random.RandomState(seed)
+    N = int(n_iter)
+
+    f = Function(f"rand{seed}")
+    f.array("A", N)
+    two_arrays = bool(rng.randint(0, 2))
+    if two_arrays:
+        f.array("B", N)
+    n_idx = rng.randint(1, 4)
+    for k in range(n_idx):
+        f.array(f"idx{k}", N)
+
+    mem: Dict[str, np.ndarray] = {
+        "A": rng.randint(-5, 12, N).astype(np.int64)}
+    if two_arrays:
+        mem["B"] = rng.randint(-5, 12, N).astype(np.int64)
+    for k in range(n_idx):
+        mem[f"idx{k}"] = rng.randint(0, N, N).astype(np.int64)
+
+    decoupled = {"A"} | ({"B"} if two_arrays and rng.randint(0, 2) else set())
+
+    e = f.block("entry")
+    e.const("zero", 0)
+    e.const("one", 1)
+    e.const("N", N)
+    for c in range(2, 8):
+        e.const(f"c{c}", c)
+    e.br("header")
+    h = f.block("header")
+    h.phi("i", [("entry", "zero"), ("latch", "i_next")])
+    h.bin("cond", "<", "i", "N")
+    h.cbr("cond", "b0", "exit")
+
+    uid = [0]
+    n_req = [0]
+
+    def fresh(stem: str) -> str:
+        uid[0] += 1
+        return f"{stem}{uid[0]}"
+
+    def rand_index(blk: Block, avail: List[str]) -> str:
+        """An always-in-bounds index expression."""
+        r = rng.randint(0, 3)
+        if r == 0:
+            return "i"
+        if r == 1:
+            k = rng.randint(0, n_idx)
+            d = fresh("j")
+            blk.load(d, f"idx{k}", "i")
+            return d
+        # (i * a + b) % N
+        a = fresh("t")
+        blk.bin(a, "*", "i", f"c{rng.randint(2, 8)}")
+        b = fresh("t")
+        blk.bin(b, "+", a, f"c{rng.randint(2, 8)}")
+        m = fresh("t")
+        blk.bin(m, "%", b, "N")
+        return m
+
+    def rand_value(blk: Block, avail: List[str]) -> str:
+        if avail and rng.randint(0, 2):
+            v = avail[rng.randint(0, len(avail))]
+            d = fresh("v")
+            blk.bin(d, "+", v, f"c{rng.randint(2, 8)}")
+            return d
+        return "i" if rng.randint(0, 2) else f"c{rng.randint(2, 8)}"
+
+    def emit_items(blk: Block, avail: List[str], depth: int) -> Block:
+        """Emit a straight-line run of items + optional nested ifs; returns
+        the block where emission continues."""
+        for _ in range(rng.randint(1, max_items + 1)):
+            choice = rng.randint(0, 4)
+            if choice == 0:  # decoupled load
+                arr = _pick_dec(rng, decoupled)
+                d = fresh("a")
+                blk.load(d, arr, rand_index(blk, avail))
+                avail.append(d)
+                n_req[0] += 1
+            elif choice == 1:  # decoupled store
+                arr = _pick_dec(rng, decoupled)
+                blk.store(arr, rand_index(blk, avail),
+                          rand_value(blk, avail))
+                n_req[0] += 1
+            elif choice == 2 and depth < max_depth:  # nested if
+                cond = _rand_cond(rng, blk, avail, fresh)
+                tname, jname = fresh("t."), fresh("j.")
+                tblk = f.block(tname)
+                join = f.block(jname)
+                has_else = bool(rng.randint(0, 2))
+                if has_else:
+                    ename = fresh("e.")
+                    eblk = f.block(ename)
+                    blk.cbr(cond, tname, ename)
+                    out_e = emit_items(eblk, list(avail), depth + 1)
+                    out_e.br(jname)
+                else:
+                    blk.cbr(cond, tname, jname)
+                out_t = emit_items(tblk, list(avail), depth + 1)
+                out_t.br(jname)
+                blk = join
+            else:  # plain arithmetic noise
+                d = fresh("n")
+                blk.bin(d, "+", "i", f"c{rng.randint(2, 8)}")
+        return blk
+
+    body = f.block("b0")
+    last = emit_items(body, [], 0)
+    last.br("latch")
+    l = f.block("latch")
+    l.bin("i_next", "+", "i", "one")
+    l.br("header")
+    f.block("exit").ret()
+    f.verify()
+
+    return GenProgram(f, mem, decoupled, n_req[0])
+
+
+def _pick_dec(rng, decoupled: Set[str]) -> str:
+    ds = sorted(decoupled)
+    return ds[rng.randint(0, len(ds))]
+
+
+def _rand_cond(rng, blk: Block, avail: List[str], fresh) -> str:
+    ops = ["<", ">", "<=", ">=", "==", "!="]
+    op = ops[rng.randint(0, len(ops))]
+    d = fresh("p")
+    if avail and rng.randint(0, 3) < 2:  # tainted branch (control LoD)
+        v = avail[rng.randint(0, len(avail))]
+        blk.bin(d, op, v, f"c{rng.randint(2, 8)}")
+    else:  # untainted
+        t = fresh("t")
+        blk.bin(t, "%", "i", f"c{rng.randint(2, 8)}")
+        blk.bin(d, op, t, f"c{rng.randint(2, 8)}")
+    return d

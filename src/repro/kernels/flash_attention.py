@@ -1,0 +1,93 @@
+"""flash_attention — causal online-softmax attention (Pallas TPU).
+
+Prefill-path workhorse.  Grid ``(B, H, Tq/BQ, Tk/BK)`` with the key dim
+innermost (sequential); running max / sum / accumulator live in VMEM
+scratch across the K sweep.  Fully-masked key blocks (beyond the causal
+frontier) are skipped with ``pl.when`` — the AGU analogy: the schedule
+*speculatively enumerates* all key blocks and the kernel poisons whole
+blocks it can prove dead, rather than running a data-dependent loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, bq: int, bk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0]
+        k = k_ref[0, 0]
+        v = v_ref[0, 0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = (alpha * acc_scr[...]
+                        + jnp.dot(p.astype(v.dtype), v,
+                                  preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _done():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q,k,v: (B, H, T, d) → (B, H, T, d).  GQA expansion is the caller's."""
+    b, h, tq, d = q.shape
+    tk = k.shape[2]
+    bq = min(bq, tq)
+    bk = min(bk, tk)
+    assert tq % bq == 0 and tk % bk == 0
+    scale = 1.0 / (d ** 0.5)
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             bq=bq, bk=bk)
+    return pl.pallas_call(
+        kern,
+        grid=(b, h, tq // bq, tk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki: (bi, hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

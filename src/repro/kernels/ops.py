@@ -1,0 +1,68 @@
+"""ops — the public kernel API used by the model stack.
+
+Dispatch policy (DESIGN.md §7): Pallas TPU lowerings run on TPU backends (or
+under ``interpret=True`` for validation); every op has a pure-jnp reference
+(:mod:`repro.kernels.ref`) that is bit-compatible in semantics and is what
+XLA compiles on CPU — including the 512-device dry-run, whose roofline
+therefore reflects the XLA path, with kernel-level wins reported separately
+by ``benchmarks/kernel_bench.py``.
+
+Set ``repro.kernels.ops.FORCE_PALLAS_INTERPRET = True`` to route the model
+stack through the interpret-mode kernels (slow; used by equivalence tests).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention as _flash_pallas
+from .paged_attention import paged_attention as _paged_pallas
+from .ragged_matmul import ragged_matmul as _ragged_pallas
+from .spec_gather import spec_gather as _gather_pallas
+from .spec_scatter import spec_scatter_add as _scatter_pallas
+
+FORCE_PALLAS_INTERPRET = False
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:  # pragma: no cover
+        return False
+
+
+def _use_pallas() -> bool:
+    return FORCE_PALLAS_INTERPRET or _on_tpu()
+
+
+def spec_gather(table, idx):
+    if _use_pallas():
+        return _gather_pallas(table, idx, interpret=not _on_tpu())
+    return ref.spec_gather(table, idx)
+
+
+def spec_scatter_add(table, idx, values):
+    if _use_pallas():
+        return _scatter_pallas(table, idx, values, interpret=not _on_tpu())
+    return ref.spec_scatter_add(table, idx, values)
+
+
+def ragged_matmul(x, w, capacity):
+    if _use_pallas():
+        return _ragged_pallas(x, w, capacity=capacity,
+                              interpret=not _on_tpu())
+    return ref.ragged_matmul(x, w, capacity)
+
+
+def flash_attention(q, k, v, causal=True):
+    if _use_pallas():
+        return _flash_pallas(q, k, v, causal=causal,
+                             interpret=not _on_tpu())
+    return ref.flash_attention(q, k, v, causal=causal)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens):
+    if _use_pallas():
+        return _paged_pallas(q, k_pages, v_pages, page_table, seq_lens,
+                             interpret=not _on_tpu())
+    return ref.paged_attention(q, k_pages, v_pages, page_table, seq_lens)

@@ -1,0 +1,98 @@
+"""paged_attention — decode attention over a paged KV cache (Pallas TPU).
+
+The paper's ``A[idx[i]]`` indirection in serving form: the page table is
+**scalar-prefetched** (the AGU), so the DMA engine fetches physical KV pages
+ahead of compute; the final, partially-filled page is fetched
+*speculatively* in full, and out-of-range slots (and ``-1`` unmapped pages)
+are **poisoned** with -inf scores in the kernel body — no replay, no
+synchronization with the growing sequence length.
+
+Grid ``(B, n_pages_max)``; online softmax state for all heads in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, page: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                      # (H, d)
+    k = k_ref[0]                      # (page, H, d)
+    v = v_ref[0]
+
+    s = jnp.einsum("hd,phd->hp", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    # poison: slots past seq_len, and whole unmapped (-1) pages
+    pos = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)[0]
+    dead = (pos >= len_ref[b]) | (pt_ref[b, p] < 0)
+    s = jnp.where(dead[None, :], NEG_INF, s)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    pr = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + pr.sum(axis=-1, keepdims=True)
+    acc_scr[...] = (alpha * acc_scr[...]
+                    + jnp.einsum("hp,phd->hd", pr,
+                                 v.astype(jnp.float32)))
+    m_scr[...] = m_new
+
+    @pl.when(p == pl.num_programs(1) - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, seq_lens: jax.Array, *,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B,H,d); k_pages/v_pages: (P,page,H,d); page_table: (B,n_max);
+    seq_lens: (B,) → (B,H,d)."""
+    b, h, d = q.shape
+    n_max = page_table.shape[1]
+    page = k_pages.shape[1]
+    scale = 1.0 / (d ** 0.5)
+
+    kern = functools.partial(_kernel, page=page, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_max),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda bi, pi, pt, sl: (bi, 0, 0)),
+            pl.BlockSpec((1, page, h, d),
+                         lambda bi, pi, pt, sl: (jnp.maximum(pt[bi, pi], 0),
+                                                 0, 0, 0)),
+            pl.BlockSpec((1, page, h, d),
+                         lambda bi, pi, pt, sl: (jnp.maximum(pt[bi, pi], 0),
+                                                 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda bi, pi, pt, sl: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(page_table, seq_lens, q, k_pages, v_pages)

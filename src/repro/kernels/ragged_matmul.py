@@ -1,0 +1,65 @@
+"""ragged_matmul — grouped expert GEMM (Pallas TPU).
+
+The compute core of speculative MoE dispatch: tokens arrive
+expert-contiguous in a fixed-``capacity`` buffer (the hoisted, speculative
+store target of Algorithm 1 — over-capacity tokens were poisoned upstream),
+so each ``(BM, BN)`` output tile belongs to exactly one expert.  Capacity is
+a multiple of BM by construction, so tiles never straddle experts — the
+TPU-native replacement for a dynamic ragged loop (DESIGN.md §3: static
+shape-stable superset + poison instead of per-request dynamism).
+
+Grid ``(E, C/BM, F/BN, D/BK)`` with a VMEM-resident f32 accumulator over
+the K steps; MXU-aligned tiles (multiples of 128 recommended).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "bm", "bn", "bk", "interpret"))
+def ragged_matmul(x: jax.Array, w: jax.Array, *, capacity: int,
+                  bm: int = 128, bn: int = 128, bk: int = 256,
+                  interpret: bool = True) -> jax.Array:
+    """x: (E*capacity, D) expert-contiguous; w: (E, D, F) → (E*capacity, F)."""
+    e, d, f = w.shape
+    assert x.shape == (e * capacity, d), (x.shape, w.shape, capacity)
+    bm = min(bm, capacity)
+    bn = min(bn, f)
+    bk = min(bk, d)
+    assert capacity % bm == 0 and f % bn == 0 and d % bk == 0
+
+    grid = (e, capacity // bm, f // bn, d // bk)
+    mt = capacity // bm
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda ei, mi, ni, ki: (ei * mt + mi, ki)),
+            pl.BlockSpec((1, bk, bn), lambda ei, mi, ni, ki: (ei, ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn),
+                               lambda ei, mi, ni, ki: (ei * mt + mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((e * capacity, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the semantic ground truth: each kernel's interpret-mode output is
+asserted allclose against these, and the model stack calls them on CPU (the
+Pallas TPU lowerings are target-hardware only; see DESIGN.md §7).
+
+The poison convention throughout is the paper's: a *negative index* marks a
+mis-speculated request — gathers return zeros for it, scatters drop it, and
+attention scores mask to -inf.  No replay ever happens.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def spec_gather(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Rows of ``table`` at ``idx``; poisoned (idx<0) rows are zeros."""
+    poison = idx < 0
+    safe = jnp.clip(idx, 0, table.shape[0] - 1)
+    rows = jnp.take(table, safe, axis=0)
+    return jnp.where(poison[:, None], jnp.zeros_like(rows), rows)
+
+
+def spec_scatter_add(table: jax.Array, idx: jax.Array,
+                     values: jax.Array) -> jax.Array:
+    """table[idx[i]] += values[i]; poisoned (idx<0) stores are dropped
+    (never committed — the paper's predicated store)."""
+    poison = idx < 0
+    safe = jnp.clip(idx, 0, table.shape[0] - 1)
+    vals = jnp.where(poison[:, None], jnp.zeros_like(values), values)
+    return table.at[safe].add(vals)
+
+
+def ragged_matmul(x: jax.Array, w: jax.Array, capacity: int) -> jax.Array:
+    """Grouped GEMM: x is (E*capacity, D) expert-contiguous; w is (E, D, F).
+    Row r uses expert r // capacity."""
+    e = w.shape[0]
+    xg = x.reshape(e, capacity, x.shape[-1])
+    return jnp.einsum("ecd,edf->ecf", xg, w).reshape(e * capacity, w.shape[-1])
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Reference attention.  q,k,v: (B, H, T, d) (H == kv heads here —
+    GQA expansion happens in the caller)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        tq, tk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((tq, tk), dtype=bool), k=tk - tq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, seq_lens: jax.Array) -> jax.Array:
+    """Decode attention over a paged KV cache.
+
+    q:          (B, H, d)          one new token per sequence
+    k_pages:    (P, page, H, d)    physical page pool (kv heads)
+    v_pages:    (P, page, H, d)
+    page_table: (B, n_max)         int32 page ids; -1 = poison (unmapped —
+                                   the speculatively fetched tail page)
+    seq_lens:   (B,)               valid tokens per sequence
+    """
+    b, h, d = q.shape
+    n_max = page_table.shape[1]
+    page = k_pages.shape[1]
+
+    poison = page_table < 0
+    safe = jnp.clip(page_table, 0, k_pages.shape[0] - 1)
+    k = k_pages[safe]                      # (B, n_max, page, H, d)
+    v = v_pages[safe]
+    k = k.transpose(0, 3, 1, 2, 4).reshape(b, h, n_max * page, d)
+    v = v.transpose(0, 3, 1, 2, 4).reshape(b, h, n_max * page, d)
+
+    pos = jnp.arange(n_max * page)[None, :]
+    valid = pos < seq_lens[:, None]
+    valid &= ~jnp.repeat(poison, page, axis=1)
+    logits = jnp.einsum("bhd,bhkd->bhk", q, k) / (d ** 0.5)
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", probs.astype(v.dtype), v)

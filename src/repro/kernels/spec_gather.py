@@ -1,0 +1,59 @@
+"""spec_gather — speculative row gather with poison (Pallas TPU).
+
+The paper's DAE template mapped onto the TPU memory system:
+
+* **AGU**: the row indices are *scalar-prefetched*
+  (``PrefetchScalarGridSpec``) — the scalar core reads them ahead of the
+  grid and drives the ``BlockSpec.index_map``, so the DMA engine (the DU)
+  issues HBM→VMEM row fetches ahead of compute.  A poisoned request
+  (``idx < 0``) still fetches a (clamped) row — requests are speculative and
+  never replayed.
+* **CU**: the kernel body applies the poison mask, zeroing mis-speculated
+  rows — the predicated-store/`store_inv` analogue (§3.1).
+
+Block layout: grid ``(n_idx, d // block_d)``; each step copies one
+``(1, block_d)`` tile of the selected table row.  The feature dim is tiled
+to keep the VMEM working set bounded for wide rows; rows stream with
+double-buffered DMA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, table_ref, out_ref):
+    i = pl.program_id(0)
+    poison = idx_ref[i] < 0
+    row = table_ref[...]
+    out_ref[...] = jnp.where(poison, jnp.zeros_like(row), row)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def spec_gather(table: jax.Array, idx: jax.Array, *, block_d: int = 512,
+                interpret: bool = True) -> jax.Array:
+    """Gather ``table[idx]`` with poisoned (negative) indices zeroed."""
+    n = idx.shape[0]
+    v, d = table.shape
+    bd = min(block_d, d)
+    assert d % bd == 0, f"feature dim {d} not divisible by block {bd}"
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, d // bd),
+        in_specs=[
+            pl.BlockSpec((1, bd),
+                         lambda i, j, idx_ref: (jnp.maximum(idx_ref[i], 0), j)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i, j, idx_ref: (i, j)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)

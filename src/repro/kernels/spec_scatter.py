@@ -1,0 +1,75 @@
+"""spec_scatter — poison-masked scatter-add (Pallas TPU).
+
+The predicated-store half of the paper's architecture (§3.1): every store
+request reaches the memory system (speculation), but a poisoned request
+(``idx < 0``) is **dropped at commit** — the table row is fetched and
+written back unchanged, never corrupted.  No replay, no out-of-bounds
+commit: poisoned indices clamp to row 0 and contribute zero.
+
+Implementation: sequential grid over requests, destination row selected by a
+scalar-prefetched index map; the output aliases the input table so each step
+read-modify-writes one ``(1, block_d)`` tile.  Same-row runs stay resident
+in VMEM (Pallas only flushes on block-index change), which makes
+expert-contiguous MoE combines cheap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, vals_ref, table_ref, out_ref):
+    i = pl.program_id(1)  # request index — the FAST grid dim, so same-row
+    #                       runs of sorted requests share a resident block
+    poison = idx_ref[i] < 0
+    contrib = jnp.where(poison, jnp.zeros_like(vals_ref[...]), vals_ref[...])
+    row = jnp.maximum(idx_ref[i], 0)
+    prev_row = jnp.maximum(idx_ref[jnp.maximum(i - 1, 0)], 0)
+    run_start = (i == 0) | (prev_row != row)
+    # run start: seed from the table; within a run: accumulate in-place on
+    # the resident out block (Pallas flushes only on block-index change)
+    base = jnp.where(run_start, table_ref[...], out_ref[...])
+    out_ref[...] = base + contrib
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def spec_scatter_add(table: jax.Array, idx: jax.Array, values: jax.Array, *,
+                     block_d: int = 512, interpret: bool = True) -> jax.Array:
+    """Return table with ``values`` added at ``idx`` (poisoned rows dropped).
+
+    Requests are destination-sorted inside the wrapper (MoE combines arrive
+    expert-contiguous already — the AGU's topological-order discipline,
+    §5.1.3 — making the sort a no-op there).
+    """
+    n = idx.shape[0]
+    v, d = table.shape
+    bd = min(block_d, d)
+    assert d % bd == 0
+
+    order = jnp.argsort(idx)
+    idx = idx[order]
+    values = values[order]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(d // bd, n),
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda j, i, idx_ref: (i, j)),       # values
+            pl.BlockSpec((1, bd),
+                         lambda j, i, idx_ref: (jnp.maximum(idx_ref[i], 0), j)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bd), lambda j, i, idx_ref: (jnp.maximum(idx_ref[i], 0), j)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((v, d), table.dtype),
+        input_output_aliases={2: 0},  # table aliases the output (index
+                                      # counts the scalar-prefetch operand)
+        interpret=interpret,
+    )(idx, values, table)

@@ -1,0 +1,165 @@
+"""Trip-count-aware cost extraction from optimized (SPMD-partitioned) HLO.
+
+``compiled.cost_analysis()`` on the CPU backend counts every ``while`` body
+**once** (verified in tests/test_hlo_cost.py), so scan-over-layers models
+would be undercounted by n_layers.  This module parses the HLO text:
+
+* splits the module into computations,
+* walks from ENTRY through ``fusion(... calls=%c)`` (×1 per call site) and
+  ``while(... body=%b)`` (× trip count, read from the loop condition's
+  ``s32[] constant(N)``),
+* accumulates **dot FLOPs** (2·(result elements)·(contraction size), shapes
+  resolved from a per-computation symbol table), **dot operand/result
+  bytes** (matmul-driven memory traffic), and **collective operand bytes**
+  by collective kind.
+
+Matmul-dominated transformer steps make dot FLOPs ≈ total FLOPs; the memory
+term additionally gets parameter+optimizer traffic added analytically by the
+roofline layer (EXPERIMENTS.md §Roofline documents the model).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(([^)]*)\)", re.M)
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=(%[\w.\-]+),\s*body=(%[\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*([^\s]+)\s+(\w[\w\-]*)",
+                     re.M)
+_DOT_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*([^\s]+)\s+dot\(([^)]*)\),"
+    r"\s*lhs_contracting_dims=\{([\d,]*)\}", re.M)
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[.\w]*\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _dims(ty: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(ty)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _type_bytes(ty: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(ty):
+        dt = m.group(1)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self.text = hlo_text
+        bounds = [(m.start(), m.group(1), m.group(2))
+                  for m in _COMP_RE.finditer(hlo_text)]
+        self.comps: Dict[str, str] = {}
+        self.sigs: Dict[str, str] = {}
+        for i, (pos, name, sig) in enumerate(bounds):
+            end = bounds[i + 1][0] if i + 1 < len(bounds) else len(hlo_text)
+            self.comps[name] = hlo_text[pos:end]
+            self.sigs[name] = sig
+        m = re.search(r"^ENTRY\s+(%[\w.\-]+)", hlo_text, re.M)
+        self.entry = m.group(1) if m else None
+        self._memo: Dict[str, Dict[str, float]] = {}
+
+    # ------------------------------------------------------------------
+    def totals(self) -> Dict[str, float]:
+        if self.entry is None:
+            return self._cost_of_text(self.text, {})
+        return self._walk(self.entry, ())
+
+    # ------------------------------------------------------------------
+    def _symbols(self, name: str) -> Dict[str, str]:
+        """name -> type string for defs and params of one computation."""
+        table: Dict[str, str] = {}
+        for pm in re.finditer(r"(%?[\w.\-]+)\s*:\s*([^\s,)]+)",
+                              self.sigs.get(name, "")):
+            table["%" + pm.group(1).lstrip("%")] = pm.group(2)
+        for dm in _DEF_RE.finditer(self.comps.get(name, "")):
+            table[dm.group(1)] = dm.group(2)
+        return table
+
+    def _trip(self, cond: str) -> int:
+        consts = [int(c) for c in _CONST_RE.findall(self.comps.get(cond, ""))]
+        return max(consts) if consts else 1
+
+    def _cost_of_text(self, text: str, sym: Dict[str, str]
+                      ) -> Dict[str, float]:
+        out: Dict[str, float] = {"dot_flops": 0.0, "dot_bytes": 0.0}
+        for m in _DOT_RE.finditer(text):
+            res_ty, operands, lhs_cd = m.group(1), m.group(2), m.group(3)
+            res_dims = _dims(res_ty) or []
+            res_elems = 1
+            for d in res_dims:
+                res_elems *= d
+            ops = [o.strip() for o in operands.split(",")]
+            lhs_ty = sym.get(ops[0], "") if ops else ""
+            lhs_dims = _dims(lhs_ty)
+            k = 1
+            if lhs_dims is not None and lhs_cd:
+                for cd in lhs_cd.split(","):
+                    if cd and int(cd) < len(lhs_dims):
+                        k *= lhs_dims[int(cd)]
+            out["dot_flops"] += 2.0 * res_elems * max(k, 1)
+            out["dot_bytes"] += (_type_bytes(res_ty)
+                                 + sum(_type_bytes(sym.get(o, ""))
+                                       for o in ops))
+        for m in _COLL_RE.finditer(text):
+            op = m.group(2)
+            out[op] = out.get(op, 0.0) + _type_bytes(m.group(1))
+        return out
+
+    def _walk(self, name: str, stack: Tuple[str, ...]) -> Dict[str, float]:
+        if name in self._memo:
+            return self._memo[name]
+        if name in stack or name not in self.comps:
+            return {}
+        text = self.comps[name]
+        out = self._cost_of_text(text, self._symbols(name))
+
+        seen_calls: List[str] = _CALLS_RE.findall(text)
+        while_bodies = {b for _, b in _WHILE_RE.findall(text)}
+        for callee in seen_calls:
+            if callee in while_bodies:
+                continue  # handled with trip counts below
+            inner = self._walk(callee, stack + (name,))
+            for k, v in inner.items():
+                out[k] = out.get(k, 0.0) + v
+        for wm in _WHILE_RE.finditer(text):
+            cond, body = wm.group(1), wm.group(2)
+            trips = self._trip(cond)
+            inner = self._walk(body, stack + (name,))
+            for k, v in inner.items():
+                out[k] = out.get(k, 0.0) + trips * v
+        self._memo[name] = out
+        return out
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, float]:
+    out = HloCost(hlo_text).totals()
+    out.setdefault("dot_flops", 0.0)
+    out.setdefault("dot_bytes", 0.0)
+    out["collective_total"] = sum(
+        v for k, v in out.items()
+        if k in ("all-gather", "all-reduce", "reduce-scatter",
+                 "all-to-all", "collective-permute"))
+    return out

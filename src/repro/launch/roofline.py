@@ -1,0 +1,118 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape), from the single-pod compiled stats:
+
+    compute    = HLO_FLOPs(global) / (chips × 197 TFLOP/s bf16)
+    memory     = HLO_bytes(global) / (chips × 819 GB/s)
+    collective = Σ collective-operand bytes(global) / (chips × 50 GB/s/link)
+
+cost_analysis() on the SPMD-partitioned module reports per-device numbers;
+collective_bytes parses the partitioned HLO (also per-device) — both are
+multiplied back to fleet-global, then normalized per chip, so the terms are
+directly comparable wall-time estimates for one step.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # TPU v5e bf16 / chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link (≈ per-chip injection, 1 link)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../../..", "results",
+                       "dryrun")
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    n_devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    step_time_s: float
+    mfu: float
+    skipped: Optional[str] = None
+
+    def row(self) -> str:
+        if self.skipped:
+            return (f"{self.arch:24s} {self.shape:12s} SKIP: "
+                    f"{self.skipped[:60]}")
+        return (f"{self.arch:24s} {self.shape:12s} "
+                f"{self.compute_s*1e3:9.2f} {self.memory_s*1e3:9.2f} "
+                f"{self.collective_s*1e3:9.2f} {self.dominant:10s} "
+                f"{self.useful_ratio:6.2f} {100*self.mfu:6.1f}%")
+
+
+def tokens_of(shape: str) -> int:
+    from .dryrun import SHAPES
+    info = SHAPES[shape]
+    return info["batch"] * (info["seq"] if info["kind"] != "decode" else 1)
+
+
+def analyze(rec: Dict) -> Roofline:
+    if "skipped" in rec:
+        return Roofline(rec["arch"], rec["shape"], 0, 0, 0, 0, "-", 0, 0, 0,
+                        0, 0, skipped=rec["skipped"])
+    n = rec["n_devices"]
+    flops_g = rec["flops"] * n           # per-device → global
+    bytes_g = rec["bytes_accessed"] * n
+    coll_g = rec["collective_bytes"]["total"] * n
+
+    compute = flops_g / (n * PEAK_FLOPS)
+    memory = bytes_g / (n * HBM_BW)
+    collective = coll_g / (n * ICI_BW)
+    dominant = max(
+        (("compute", compute), ("memory", memory),
+         ("collective", collective)), key=lambda kv: kv[1])[0]
+
+    tokens = tokens_of(rec["shape"])
+    mult = 3 if rec["shape"].startswith("train") else 1  # fwd+bwd
+    model_flops = 2 * mult * rec["params_active"] * tokens
+    useful = model_flops / flops_g if flops_g else 0.0
+    step = max(compute, memory, collective)
+    mfu = model_flops / (step * n * PEAK_FLOPS) if step else 0.0
+    return Roofline(rec["arch"], rec["shape"], n, compute, memory,
+                    collective, dominant, model_flops, flops_g, useful,
+                    step, mfu)
+
+
+def load_all(mesh: str = "single") -> List[Roofline]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        with open(p) as fh:
+            out.append(analyze(json.load(fh)))
+    return out
+
+
+def main() -> str:
+    rows = load_all()
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp_ms':>9s} {'mem_ms':>9s} "
+           f"{'coll_ms':>9s} {'dominant':10s} {'useful':>6s} {'MFU':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(r.row())
+    live = [r for r in rows if not r.skipped]
+    if live:
+        worst = min(live, key=lambda r: r.mfu)
+        coll = max(live, key=lambda r: (r.collective_s /
+                                        max(r.step_time_s, 1e-12)))
+        print(f"\nworst MFU: {worst.arch} × {worst.shape} "
+              f"({100*worst.mfu:.1f}%)")
+        print(f"most collective-bound: {coll.arch} × {coll.shape}")
+        return f"cells={len(live)},worst_mfu={100*worst.mfu:.1f}%"
+    return "no_results"
+
+
+if __name__ == "__main__":
+    main()

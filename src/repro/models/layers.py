@@ -1,0 +1,202 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (chunked online-softmax),
+SwiGLU.  Pure functions over param pytrees; layer stacks are scanned.
+
+The chunked attention is the XLA-compilable twin of the Pallas
+flash-attention kernel (same online-softmax recurrence, O(T·chunk) memory) —
+it is what the dry-run lowers on every backend, while the Pallas kernel is
+the TPU fast path (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import constrain
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, hd); pos: (T,) or scalar broadcast."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs      # (T, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)      # (T, 1, half)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    if g.ndim == 3:  # (B, T, ff): TP on the hidden dim, DP on batch
+        g = constrain(g, "dp", None, "model")
+        u = constrain(u, "dp", None, "model")
+    out = jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+    if out.ndim == 3:
+        out = constrain(out, "dp", None, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk: int = 512,
+                      q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention scanning KV chunks.
+
+    q, k, v: (B, H, T, d) with EQUAL head counts — the caller expands GQA
+    to full heads so the head dim shards cleanly on the model axis and the
+    score tensors stay local (EXPERIMENTS.md §Perf H1).
+    """
+    b, hq, tq, d = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    assert hkv == hq, "expand GQA heads before chunked_attention"
+    rep = 1
+    qg = q.reshape(b, hkv, rep, tq, d)
+    scale = 1.0 / (d ** 0.5)
+
+    chunk = min(chunk, tk)
+    if tk % chunk:
+        pad = chunk - tk % chunk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        tk_pad = tk + pad
+    else:
+        tk_pad = tk
+    n_chunks = tk_pad // chunk
+    ks = k.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, hkv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    q_pos = q_offset + jnp.arange(tq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kc, vc = inp
+        s = jnp.einsum("bhrqd,bhkd->bhrqk", qg, kc).astype(jnp.float32)
+        s *= scale
+        k_pos = ci * chunk + jnp.arange(chunk)
+        valid = k_pos < tk
+        if causal:
+            valid = valid[None, :] & (k_pos[None, :] <= q_pos[:, None])
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+        else:
+            s = jnp.where(valid[None, None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(axis=-1, keepdims=True)
+        acc_new = alpha * acc + jnp.einsum(
+            "bhrqk,bhkd->bhrqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, rep, tq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, rep, tq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, rep, tq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_chunks), ks, vs))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(b, hq, tq, d).astype(q.dtype)
+
+
+def gqa_attention(params: Dict, x: jax.Array, *, n_heads: int,
+                  n_kv_heads: int, head_dim: int, theta: float,
+                  pos_offset: int = 0, kv_cache: Optional[Tuple] = None,
+                  cache_len=None, cross_kv: Optional[Tuple] = None,
+                  causal: bool = True):
+    """GQA attention block (pre-norm outside).  Returns (out, new_kv).
+
+    kv_cache: (k, v) with shape (B, Hkv, Tmax, hd) — decode path appends at
+    ``cache_len`` and attends over the valid prefix.
+    cross_kv: precomputed (k, v) for cross-attention (enc-dec / VLM).
+    """
+    b, t, _ = x.shape
+    rep = n_heads // n_kv_heads
+    q = jnp.einsum("btd,dhk->bhtk",
+                   x, params["wq"].reshape(x.shape[-1], n_heads, head_dim)
+                   ).astype(x.dtype)
+    # H1 (EXPERIMENTS §Perf): queries shard on heads over the model axis;
+    # K/V stay replicated across it and expand to full heads locally, so
+    # every score/context product is communication-free.
+    q = constrain(q, "dp", "model", None, None)
+    if cross_kv is None:
+        k = jnp.einsum("btd,dhk->bhtk",
+                       x, params["wk"].reshape(x.shape[-1], n_kv_heads,
+                                               head_dim))
+        v = jnp.einsum("btd,dhk->bhtk",
+                       x, params["wv"].reshape(x.shape[-1], n_kv_heads,
+                                               head_dim))
+        pos = pos_offset + jnp.arange(t)
+        q = rope(q.transpose(0, 2, 1, 3), pos, theta).transpose(0, 2, 1, 3)
+        k = rope(k.transpose(0, 2, 1, 3), pos, theta).transpose(0, 2, 1, 3)
+        k = constrain(k, "dp", None, None, None)
+        v = constrain(v, "dp", None, None, None)
+    else:
+        k, v = cross_kv
+        causal = False
+
+    def expand(a):
+        if rep == 1:
+            return a
+        a = jnp.repeat(a, rep, axis=1)
+        return constrain(a, "dp", "model", None, None)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, 0, cache_len, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, 0, cache_len, 0))
+        new_cache = (ck, cv)
+        # decode is sequence-parallel: the cache keeps its T-sharding, the
+        # (tiny) q replicates across the model axis, scores psum once
+        cke = jnp.repeat(ck, rep, axis=1) if rep > 1 else ck
+        cve = jnp.repeat(cv, rep, axis=1) if rep > 1 else cv
+        cke = constrain(cke, "dp", None, "model", None)
+        cve = constrain(cve, "dp", None, "model", None)
+        out = _decode_attention(q, cke, cve, cache_len + t)
+        out = out.reshape(b, t, n_heads * head_dim)
+    else:
+        out = chunked_attention(q, expand(k), expand(v), causal=causal,
+                                q_offset=pos_offset)
+        out = out.transpose(0, 2, 1, 3).reshape(b, t, n_heads * head_dim)
+    out = constrain(out, "dp", None, "model")
+    proj = jnp.einsum("btk,kd->btd", out, params["wo"])
+    return constrain(proj, "dp", None, None), new_cache
+
+
+def _decode_attention(q: jax.Array, ck: jax.Array, cv: jax.Array,
+                      valid_len) -> jax.Array:
+    """Few-token attention over a (B, Hkv, Tmax, d) cache with a validity
+    mask — speculative full-cache read + poison past the end, causal within
+    the new tokens (multi-token prefill writes then attends the cache)."""
+    b, hq, t, d = q.shape
+    hkv = ck.shape[1]
+    assert hkv == hq, "expand GQA heads before _decode_attention"
+    rep = 1
+    qg = q.reshape(b, hkv, rep, t, d)
+    s = jnp.einsum("bhrqd,bhkd->bhrqk", qg, ck).astype(jnp.float32)
+    s /= (d ** 0.5)
+    k_pos = jnp.arange(ck.shape[2])                       # (Tmax,)
+    q_pos = valid_len - t + jnp.arange(t)                 # (t,)
+    ok = k_pos[None, :] <= q_pos[:, None]                 # causal + validity
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrqk,bhkd->bhrqd", p.astype(cv.dtype), cv)
+    return out.reshape(b, hq, t, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,113 @@
+"""Attention-free blocks: RWKV-6 (Finch, data-dependent decay) and a Mamba
+selective-SSM block (for the Jamba hybrid).  Linear recurrences run as
+``lax.scan`` over time (O(1) state — the reason these archs keep the
+``long_500k`` cell); decode carries the state explicitly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_block(params: Dict, x: jax.Array, *, n_heads: int, head_dim: int,
+                state: Optional[jax.Array] = None,
+                return_state: bool = False):
+    """RWKV-6 time-mix: S_t = diag(w_t)·S_{t-1} + k_tᵀ·v_t; y_t = r_t·S_t
+    with data-dependent decay w_t (the Finch contribution).
+
+    x: (B, T, D).  state: (S, x_last) with S (B, H, hd, hd) and x_last
+    (B, D) carrying the token-shift across decode steps.
+    """
+    b, t, dm = x.shape
+    h, hd = n_heads, head_dim
+
+    # token shift (x_{t-1} mix) — cheap approximation of the μ interpolation
+    if state is not None:
+        s_in, x_last = state
+        x_prev = jnp.concatenate([x_last[:, None].astype(x.dtype),
+                                  x[:, :-1]], axis=1)
+    else:
+        s_in = None
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    mix = params["mu"]  # (4, D) for r,k,v,w
+    xr = x * mix[0] + x_prev * (1 - mix[0])
+    xk = x * mix[1] + x_prev * (1 - mix[1])
+    xv = x * mix[2] + x_prev * (1 - mix[2])
+    xw = x * mix[3] + x_prev * (1 - mix[3])
+
+    r = jnp.einsum("btd,dk->btk", xr, params["wr"]).reshape(b, t, h, hd)
+    k = jnp.einsum("btd,dk->btk", xk, params["wk"]).reshape(b, t, h, hd)
+    v = jnp.einsum("btd,dk->btk", xv, params["wv"]).reshape(b, t, h, hd)
+    # data-dependent decay in (0, 1)
+    w = jax.nn.sigmoid(
+        jnp.einsum("btd,dk->btk", xw, params["ww"]).reshape(b, t, h, hd)
+        + params["w_bias"].reshape(1, 1, h, hd))
+    u = params["u"].reshape(h, hd)  # bonus for the current token
+
+    s0 = s_in if s_in is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp           # (B, H, hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt).astype(jnp.float32)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         (s + u[None, :, :, None] * kv).astype(rt.dtype))
+        s_new = wt[..., None].astype(jnp.float32) * s + kv
+        return s_new, out
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    s_fin, outs = jax.lax.scan(step, s0, xs)
+    y = outs.transpose(1, 0, 2, 3).reshape(b, t, h * hd)
+    y = jnp.einsum("btk,kd->btd", y, params["wo"])
+    if return_state:
+        return y, (s_fin, x[:, -1])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM), simplified for the Jamba hybrid
+# ---------------------------------------------------------------------------
+
+
+def mamba_block(params: Dict, x: jax.Array, *, d_state: int,
+                state: Optional[jax.Array] = None,
+                return_state: bool = False):
+    """Selective SSM: h_t = exp(Δ_t·A)⊙h_{t-1} + Δ_t·B_t·u_t; y = C_t·h_t.
+
+    x: (B, T, D); state: (B, D, N).
+    """
+    b, t, d = x.shape
+    n = d_state
+
+    u = jnp.einsum("btd,de->bte", x, params["in_proj"])     # (B,T,D)
+    gate = jax.nn.silu(jnp.einsum("btd,de->bte", x, params["gate_proj"]))
+    delta = jax.nn.softplus(
+        jnp.einsum("btd,d->bt", x, params["dt_proj"]))[..., None]  # (B,T,1)
+    bmat = jnp.einsum("btd,dn->btn", x, params["b_proj"])   # (B,T,N)
+    cmat = jnp.einsum("btd,dn->btn", x, params["c_proj"])
+    a = -jnp.exp(params["a_log"])                           # (D, N), negative
+
+    s0 = state if state is not None else jnp.zeros((b, d, n), jnp.float32)
+
+    def step(s, inp):
+        ut, dt, bt, ct = inp            # (B,D) (B,1) (B,N) (B,N)
+        da = jnp.exp(dt[..., None] * a[None])               # (B,D,N)
+        s_new = da * s + (dt * ut)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", s_new.astype(ct.dtype), ct)
+        return s_new, y
+
+    xs = (u.transpose(1, 0, 2), delta.transpose(1, 0, 2),
+          bmat.transpose(1, 0, 2), cmat.transpose(1, 0, 2))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2) * gate
+    y = jnp.einsum("bte,ed->btd", y, params["out_proj"])
+    if return_state:
+        return y, s_fin
+    return y

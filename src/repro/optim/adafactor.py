@@ -1,0 +1,76 @@
+"""Adafactor (factored second moments, no first moment) — the ≥300B-param
+optimizer: state is O(rows+cols) per matrix instead of O(rows×cols), which
+is what lets the 1T-param kimi-k2 cell fit the v5e HBM budget
+(EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any   # row second moments (or full moment for vectors)
+    vc: Any   # col second moments (or empty)
+
+
+def adafactor(lr: Callable[[jax.Array], jax.Array] | float, *,
+              decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params) -> AdafactorState:
+        def vr(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            if _factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((0,), jnp.float32)
+
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree.map(vr, params),
+                              jax.tree.map(vc, params))
+
+    def update(grads, state: AdafactorState, params
+               ) -> Tuple[Any, AdafactorState]:
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                # factored normalization: g / sqrt(vr ⊗ vc / mean(vr))
+                u = g * jax.lax.rsqrt(
+                    (vr[..., None] * vc[..., None, :])
+                    / jnp.maximum(vr.mean(axis=-1, keepdims=True),
+                                  eps)[..., None] + eps)
+            else:
+                vr = beta * vr + (1 - beta) * g2
+                vc_new = vc
+                u = g * jax.lax.rsqrt(vr + eps)
+                vc = vc_new
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), vr, vc
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        pick = lambda i: jax.tree.map(
+            lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), AdafactorState(step, pick(1), pick(2))
+
+    return init, update

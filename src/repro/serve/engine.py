@@ -1,0 +1,74 @@
+"""Batched serving engine: continuous-batching-lite over prefill/decode.
+
+Requests join a fixed-slot batch; finished sequences free their slot for the
+next queued prompt (slot reuse = the speculative-buffer discipline again:
+fixed-capacity superset, poisoned/empty slots masked).  Greedy sampling.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models.model import build_model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params=None, *, slots: int = 4,
+                 max_len: int = 128, dispatch: str = "spec"):
+        self.cfg = cfg
+        self.model = build_model(cfg, dispatch=dispatch)
+        self.params = params if params is not None else self.model.init(
+            jax.random.PRNGKey(0))
+        self.slots = slots
+        self.max_len = max_len
+        self._decode = jax.jit(
+            lambda p, c, t, n: self.model.decode_step(p, c, t, n))
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve all requests to completion; batched prefill per wave."""
+        queue = list(requests)
+        results: Dict[int, List[int]] = {}
+        while queue:
+            wave, queue = queue[:self.slots], queue[self.slots:]
+            self._run_wave(wave)
+            for r in wave:
+                results[r.rid] = r.out
+        return results
+
+    def _run_wave(self, wave: List[Request]) -> None:
+        b = len(wave)
+        plen = max(len(r.prompt) for r in wave)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        logits, cache = self.model.prefill(self.params, jnp.asarray(toks),
+                                           max_len=self.max_len)
+        pos = plen
+        cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        max_new = max(r.max_new for r in wave)
+        for step in range(max_new):
+            for i, r in enumerate(wave):
+                if step < r.max_new:
+                    r.out.append(int(cur[i, 0]))
+            if pos + 1 >= self.max_len:
+                break
+            logits, cache = self._decode(self.params, cache, cur, pos)
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            pos += 1
+        for r in wave:
+            r.done = True

@@ -1,0 +1,102 @@
+"""Fault-tolerant checkpointing.
+
+* **Atomic**: write to ``step_<n>.tmp/`` then rename; a ``LATEST`` pointer
+  is updated last, so a crash at any instant leaves a loadable state.
+* **Async**: ``save_async`` snapshots device arrays to host, then writes on
+  a background thread — the training loop is blocked only for the
+  device→host copy.
+* **Elastic**: arrays are stored unsharded (host-gathered); ``restore``
+  re-shards onto whatever mesh the new job runs with — restart on a
+  different topology (node failure shrink, pod regrow) just works.
+  (At real 1000-node scale you'd write per-shard files + a reshard manifest;
+  the single-file form keeps the same API and is what this container can
+  exercise.)
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import shutil
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Any) -> str:
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)
+        return self._write(step, host_state)
+
+    def save_async(self, step: int, state: Any) -> None:
+        self.wait()  # one in flight
+        host_state = jax.tree.map(lambda x: np.asarray(x), state)  # snapshot
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_state), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_state: Any) -> str:
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        with open(os.path.join(tmp, "state.pkl"), "wb") as fh:
+            pickle.dump(host_state, fh, protocol=4)
+        with open(os.path.join(tmp, "meta.json"), "w") as fh:
+            json.dump({"step": step}, fh)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        with open(os.path.join(self.dir, "LATEST.tmp"), "w") as fh:
+            fh.write(str(step))
+        os.replace(os.path.join(self.dir, "LATEST.tmp"),
+                   os.path.join(self.dir, "LATEST"))
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for n in os.listdir(self.dir):
+            if n.startswith("step_") and not n.endswith(".tmp"):
+                out.append(int(n.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as fh:
+            return int(fh.read().strip())
+
+    def restore(self, step: Optional[int] = None,
+                shard_fn: Optional[Callable[[Any], Any]] = None) -> Any:
+        """Load a step (default: LATEST).  ``shard_fn`` re-places arrays on
+        the *current* mesh — elastic restarts pass
+        ``lambda tree: jax.device_put(tree, shardings)``."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        with open(os.path.join(self.dir, f"step_{step}", "state.pkl"),
+                  "rb") as fh:
+            state = pickle.load(fh)
+        return shard_fn(state) if shard_fn else state

@@ -1,0 +1,58 @@
+"""The jit-able training step: loss → grads → optimizer, with optional
+error-feedback gradient compression ahead of the DP all-reduce."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.model import Model
+from .. import optim as optim_mod
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+    residual: Any = None     # error-feedback compression state
+
+
+def make_optimizer(cfg: ArchConfig, *, peak_lr: float = 3e-4,
+                   warmup: int = 200, total: int = 10_000):
+    """AdamW below ~100B params; Adafactor above (O(r+c) optimizer state —
+    the 1T-param memory play, DESIGN.md §5)."""
+    from ..configs.base import param_count
+    lr = optim_mod.warmup_cosine(peak_lr, warmup, total)
+    total_params, _ = param_count(cfg)
+    if total_params > 100e9:
+        return optim_mod.adafactor(lr), "adafactor"
+    return optim_mod.adamw(lr), "adamw"
+
+
+def make_train_step(model: Model, *, compress: bool = False,
+                    donate: bool = True, **opt_kw):
+    (opt_init, opt_update), opt_name = make_optimizer(model.cfg, **opt_kw)
+
+    def init_state(key) -> TrainState:
+        params = model.init(key)
+        res = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+               if compress else None)
+        return TrainState(params, opt_init(params),
+                          jnp.zeros((), jnp.int32), res)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState,
+                                                            Dict]:
+        loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        residual = state.residual
+        if compress:
+            grads, residual = optim_mod.error_feedback_compress(
+                grads, residual)
+        new_params, new_opt = opt_update(grads, state.opt, state.params)
+        metrics = {"loss": loss, "step": state.step}
+        return TrainState(new_params, new_opt, state.step + 1,
+                          residual), metrics
+
+    return init_state, train_step, opt_name

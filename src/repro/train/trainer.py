@@ -1,0 +1,76 @@
+"""The training loop: data prefetch, jit'd step, periodic async checkpoints,
+fault-monitor hooks, restart-from-LATEST.  Single-process here; the
+multi-host story is the same loop per host with jax.distributed initialize
+(DESIGN.md §5)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from ..models.model import build_model
+from .checkpoint import CheckpointManager
+from .fault import FaultConfig, FaultMonitor
+from .train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    global_batch: int = 8
+    seq_len: int = 64
+    peak_lr: float = 1e-3
+    warmup: int = 20
+    compress_grads: bool = False
+    dispatch: str = "spec"
+
+
+def train(cfg: ArchConfig, tcfg: TrainerConfig,
+          log: Callable[[str], None] = print) -> Dict[str, Any]:
+    model = build_model(cfg, dispatch=tcfg.dispatch)
+    init_state, train_step, opt_name = make_train_step(
+        model, compress=tcfg.compress_grads,
+        peak_lr=tcfg.peak_lr, warmup=tcfg.warmup, total=tcfg.steps)
+    step_fn = jax.jit(train_step, donate_argnums=(0,))
+
+    mgr = CheckpointManager(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+    start_step = 0
+    if mgr and mgr.latest_step() is not None:
+        state = mgr.restore(shard_fn=lambda t: jax.tree.map(jnp.asarray, t))
+        start_step = int(state.step)
+        log(f"[trainer] restored step {start_step} from {tcfg.ckpt_dir}")
+    else:
+        state = init_state(jax.random.PRNGKey(0))
+
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=tcfg.seq_len,
+                                  global_batch=tcfg.global_batch))
+    monitor = FaultMonitor(["host0"], FaultConfig())
+    losses = []
+    t_start = time.perf_counter()
+    for step in range(start_step, tcfg.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        monitor.heartbeat("host0")
+        monitor.report_step("host0", time.perf_counter() - t0)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % tcfg.log_every == 0:
+            log(f"[trainer] step {step:5d} loss {loss:.4f}")
+        if mgr and step and step % tcfg.ckpt_every == 0:
+            mgr.save_async(step, state)
+    if mgr:
+        mgr.save(tcfg.steps, state)
+        mgr.wait()
+    wall = time.perf_counter() - t_start
+    return {"final_loss": losses[-1] if losses else None,
+            "losses": losses, "optimizer": opt_name,
+            "wall_s": wall, "state": state}

@@ -1,0 +1,69 @@
+"""The 9 paper benchmarks: correctness vs the sequential oracle and the
+paper's qualitative performance relations."""
+import numpy as np
+import pytest
+
+from repro.bench_irregular import ALL
+from repro.core import pipeline
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for name, build in ALL.items():
+        case = build()
+        out[name] = (case, pipeline.run_all(case.fn, case.decoupled,
+                                            case.memory, params=case.params))
+    return out
+
+
+@pytest.mark.parametrize("name", list(ALL))
+def test_memory_matches_oracle(results, name):
+    case, runs = results[name]
+    ref = runs["ref"].memory
+    for v in ("sta", "dae", "spec"):
+        for k in ref:
+            assert np.array_equal(runs[v].memory[k], ref[k]), (name, v, k)
+
+
+@pytest.mark.parametrize("name", list(ALL))
+def test_speculation_is_active(results, name):
+    _, runs = results[name]
+    comp = runs["spec"].compiled
+    assert comp.spec.spec_req_map, f"{name}: nothing was speculated"
+    assert not any("hazard" in v for v in comp.spec.fallback.values()), \
+        f"{name}: hazard fallback fired: {comp.spec.fallback}"
+
+
+@pytest.mark.parametrize("name", list(ALL))
+def test_spec_beats_dae(results, name):
+    """The paper's core claim: speculation recovers the decoupling loss."""
+    _, runs = results[name]
+    assert runs["spec"].cycles < runs["dae"].cycles
+
+
+@pytest.mark.parametrize("name", list(ALL))
+def test_spec_beats_sta(results, name):
+    _, runs = results[name]
+    assert runs["spec"].cycles < runs["sta"].cycles
+
+
+@pytest.mark.parametrize("name", list(ALL))
+def test_spec_close_to_oracle(results, name):
+    """SPEC within ~30% of the manual-LoD-removal bound (paper: <5% avg,
+    worst cases bfs/bc larger due to LSQ pressure)."""
+    _, runs = results[name]
+    assert runs["spec"].cycles <= 1.35 * runs["oracle"].cycles
+
+
+def test_bc_uses_two_lsqs(results):
+    case, _ = results["bc"]
+    assert case.decoupled == {"D", "S"}
+
+
+def test_misspec_rates_nontrivial(results):
+    rates = {n: runs["spec"].result.misspec_rate
+             for n, (_, runs) in results.items()}
+    assert rates["bfs"] > 0.5     # paper: 95%
+    assert rates["hist"] < 0.1    # paper: 2%
+    assert 0.2 < rates["sort"] < 0.8  # paper: 49%

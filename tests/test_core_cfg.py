@@ -1,0 +1,63 @@
+"""CFG analyses: dominators, control dependence, loops, region queries."""
+import pytest
+
+from repro.core.cfg import CFGInfo
+from repro.core.ir import Function
+
+
+def diamond_loop():
+    f = Function("d")
+    f.array("A", 8)
+    e = f.block("entry"); e.const("z", 0); e.const("o", 1); e.const("N", 8)
+    e.br("h")
+    h = f.block("h"); h.phi("i", [("entry", "z"), ("l", "i2")])
+    h.bin("c", "<", "i", "N"); h.cbr("c", "b", "x")
+    b = f.block("b"); b.load("a", "A", "i"); b.bin("p", ">", "a", "z")
+    b.cbr("p", "t", "l")
+    t = f.block("t"); t.store("A", "i", "o"); t.br("l")
+    l = f.block("l"); l.bin("i2", "+", "i", "o"); l.br("h")
+    f.block("x").ret()
+    f.verify()
+    return f
+
+
+def test_dominators_and_loops():
+    info = CFGInfo(diamond_loop())
+    assert info.idom["b"] == "h"
+    assert info.idom["t"] == "b"
+    assert info.back_edges == {("l", "h")}
+    assert info.loops["h"] == {"h", "b", "t", "l"}
+    assert info.loop_latch["h"] == "l"
+
+
+def test_control_dependence():
+    info = CFGInfo(diamond_loop())
+    assert "b" in info.control_deps["t"]
+    assert "h" in info.control_deps["b"]
+    # the latch is control dependent on the loop condition, not on b's branch
+    assert "h" in info.control_deps["l"]
+
+
+def test_region_queries():
+    info = CFGInfo(diamond_loop())
+    assert info.region_rpo("b", "h") == ["b", "t", "l"]
+    paths = list(info.region_paths("b", "h"))
+    assert sorted(paths) == [["b", "l"], ["b", "t", "l"]]
+    assert info.reachable_forward("b", "t")
+    assert not info.reachable_forward("t", "b")
+
+
+def test_irreducible_rejected():
+    f = Function("irr")
+    e = f.block("entry"); e.const("c", 1); e.cbr("c", "a", "b")
+    a = f.block("a"); a.br("b")
+    b = f.block("b"); b.br("a")  # a<->b cycle with two entries
+    with pytest.raises(ValueError, match="irreducible"):
+        CFGInfo(f)
+
+
+def test_dominance_relation():
+    info = CFGInfo(diamond_loop())
+    assert info.dominates("h", "t")
+    assert not info.dominates("t", "l")
+    assert info.post_dominates("l", "t")

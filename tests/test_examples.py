@@ -1,0 +1,42 @@
+"""The example scripts must run end to end (shrunk via argv where needed)."""
+import os
+import runpy
+import sys
+
+import pytest
+
+# `examples` is a plain directory at the repo root (not an installed pkg)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _run(mod, argv):
+    old = sys.argv
+    sys.argv = argv
+    try:
+        runpy.run_module(mod, run_name="__main__")
+    finally:
+        sys.argv = old
+
+
+def test_quickstart(capsys):
+    _run("examples.quickstart", ["quickstart"])
+    out = capsys.readouterr().out
+    assert "sequentially consistent = True" in out
+    assert "spec" in out
+
+
+def test_train_lm_short(tmp_path):
+    _run("examples.train_lm",
+         ["train_lm", "--steps", "8", "--batch", "2", "--seq", "32",
+          "--ckpt", str(tmp_path)])
+
+
+def test_serve_lm(capsys):
+    _run("examples.serve_lm", ["serve_lm"])
+    assert "served" in capsys.readouterr().out
+
+
+def test_dae_speculation_demo(capsys):
+    _run("examples.dae_speculation_demo", ["demo"])
+    out = capsys.readouterr().out
+    assert "ample capacity" in out

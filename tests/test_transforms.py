@@ -1,0 +1,115 @@
+"""Structural tests for §3.2 decoupling, §5.1 hoisting, §5.2/5.3 poisoning."""
+import numpy as np
+
+from repro.core import lod, pipeline
+from repro.core.ir import Function
+
+
+def fig1b(N=64):
+    """for i: a=A[i]; if a>0: j=idx[i]; A[j] += 1   (the paper's Fig. 1b)."""
+    f = Function("hist")
+    f.array("A", N); f.array("idx", N)
+    e = f.block("entry"); e.const("zero", 0); e.const("one", 1)
+    e.const("N", N); e.br("header")
+    h = f.block("header"); h.phi("i", [("entry", "zero"), ("latch", "i_next")])
+    h.bin("c", "<", "i", "N"); h.cbr("c", "body", "exit")
+    b = f.block("body"); b.load("a", "A", "i"); b.bin("p", ">", "a", "zero")
+    b.cbr("p", "then", "latch")
+    t = f.block("then"); t.load("j", "idx", "i"); t.load("x", "A", "j")
+    t.bin("x1", "+", "x", "one"); t.store("A", "j", "x1"); t.br("latch")
+    l = f.block("latch"); l.bin("i_next", "+", "i", "one"); l.br("header")
+    f.block("exit").ret()
+    f.verify()
+    return f
+
+
+def test_lod_analysis_fig1b():
+    f = fig1b()
+    info = lod.analyze(f, {"A"})
+    # the branch block 'body' is the (only) LoD source
+    assert info.tainted_branches == {"body"}
+    assert "a" in info.tainted and "p" in info.tainted
+    # the store (and the A[j] load) chain to head 'body'
+    store_mids = [m for m, b in info.request_block.items() if b == "then"]
+    assert store_mids
+    for m in store_mids:
+        assert info.chain_heads[m] == {"body"}
+        ok, why = lod.speculable(info, m)
+        assert ok, why
+    assert not info.data_lod
+
+
+def test_data_lod_refused():
+    """if (A[i]) A[i++] = 1 — φ-carried data LoD must not be speculated."""
+    f = Function("dyn")
+    f.array("A", 16)
+    e = f.block("entry"); e.const("zero", 0); e.const("one", 1)
+    e.const("N", 16); e.br("header")
+    h = f.block("header")
+    h.phi("i", [("entry", "zero"), ("latch", "i_next")])
+    h.phi("w", [("entry", "zero"), ("latch", "w_next")])
+    h.bin("c", "<", "i", "N"); h.cbr("c", "body", "exit")
+    b = f.block("body"); b.load("a", "A", "i"); b.bin("p", ">", "a", "zero")
+    b.cbr("p", "then", "latch")
+    t = f.block("then"); t.store("A", "w", "one")
+    t.bin("w1", "+", "w", "one"); t.br("latch")
+    l = f.block("latch")
+    l.select("w_next", "p", "w1", "w")
+    l.bin("i_next", "+", "i", "one"); l.br("header")
+    f.block("exit").ret()
+    f.verify()
+    info = lod.analyze(f, {"A"})
+    store_mid = [m for m, b in info.request_block.items() if b == "then"][0]
+    assert store_mid in info.data_lod  # w is tainted through the select/φ
+
+
+def test_spec_restores_decoupling():
+    """After SPEC, no AGU send_ld should remain synchronous (Fig. 1c)."""
+    comp = pipeline.compile_spec(fig1b(), {"A"})
+    syncs = [i for blk in comp.agu.blocks.values() for i in blk.body
+             if i.op == "send_ld" and i.meta.get("sync")]
+    assert not syncs
+    # the guarding branch is gone from the AGU
+    cbrs = [b for b in comp.agu.blocks.values() if b.term.kind == "cbr"
+            and b.name != "header"]
+    assert not cbrs
+
+
+def test_dae_keeps_sync():
+    """Without speculation the LoD load stays synchronous (Fig. 1b)."""
+    comp = pipeline.compile_dae(fig1b(), {"A"})
+    syncs = [i for blk in comp.agu.blocks.values() for i in blk.body
+             if i.op == "send_ld" and i.meta.get("sync")]
+    assert syncs
+
+
+def test_poison_counts_fig1b():
+    comp = pipeline.compile_spec(fig1b(), {"A"})
+    assert comp.poison_stats.poison_blocks == 1
+    assert comp.poison_stats.poison_calls == 1
+
+
+def test_cu_block_structure_preserved():
+    """The CU keeps the full original CFG (plus synthetic poison blocks)."""
+    f = fig1b()
+    comp = pipeline.compile_spec(f, {"A"})
+    for name in f.blocks:
+        assert name in comp.cu.blocks
+    synth = [b for b in comp.cu.blocks.values() if b.synthetic]
+    assert len(synth) == comp.poison_stats.poison_blocks
+
+
+def test_merge_poison_blocks():
+    from repro.core.ir import Instr
+    from repro.core.poison import merge_poison_blocks
+    f = Function("m")
+    e = f.block("entry"); e.const("c", 1); e.cbr("c", "p1", "p2")
+    for n in ("p1", "p2"):
+        b = f.block(n)
+        b.synthetic = True
+        b.body.append(Instr("poison_st", None, (), "A", {"mid": 7}))
+        b.br("out")
+    f.block("out").ret()
+    merged = merge_poison_blocks(f)
+    assert merged == 1
+    assert ("p1" in f.blocks) ^ ("p2" in f.blocks)
