@@ -1,0 +1,18 @@
+# Repo-wide targets. The tier-1 gate is `make check`; `make bench-quick`
+# is the <60 s perf smoke (reduced DAE matrix, no jax sections) and
+# `make bench` the full harness with a machine-readable JSON drop.
+
+PY        ?= python
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: check bench-quick bench test
+
+check test:
+	$(PY) -m pytest -x -q
+
+bench-quick:
+	$(PY) -m benchmarks.run --quick --json BENCH_quick.json
+
+bench:
+	$(PY) -m benchmarks.run --json BENCH_machine.json

@@ -66,24 +66,34 @@ def cu_size(fn) -> int:
     return sum(len(b.phis) + len(b.body) + 1 for b in fn.blocks.values())
 
 
-def main():
+def _run_level(n_levels: int):
+    fn, mem = build_nested(n_levels)
+    runs = pipeline.run_all(fn, {"A"}, mem, variants=("spec", "oracle"))
+    comp = runs["spec"].compiled
+    ocomp = runs["oracle"].compiled
+    pb = comp.poison_stats.poison_blocks
+    pc = comp.poison_stats.poison_calls
+    expc = n_levels * (n_levels + 1) // 2
+    cyc = runs["spec"].cycles / runs["oracle"].cycles - 1
+    size = cu_size(comp.cu) / cu_size(ocomp.cu) - 1
+    return (n_levels, pb, pc, expc, cyc, size,
+            runs["spec"].cycles, runs["oracle"].cycles)
+
+
+def main(jobs=None, max_levels: int = 8):
+    # the eight nesting depths are independent: fan out like dae_table1
+    from benchmarks.dae_table1 import _pmap, _resolve_jobs
+
     print(f"{'n':>2s} {'poisonB':>8s} {'poisonC':>8s} {'expC':>6s} "
           f"{'SPEC':>8s} {'ORACLE':>8s} {'cyc_ovh':>8s} {'CU_size_ovh':>11s}")
+    levels = list(range(1, max_levels + 1))
+    results = _pmap(_run_level, levels, _resolve_jobs(jobs, len(levels)),
+                    weights=levels)  # deeper nests simulate longer
     rows = []
-    for n_levels in range(1, 9):
-        fn, mem = build_nested(n_levels)
-        runs = pipeline.run_all(fn, {"A"}, mem,
-                                variants=("spec", "oracle"))
-        comp = runs["spec"].compiled
-        ocomp = runs["oracle"].compiled
-        pb = comp.poison_stats.poison_blocks
-        pc = comp.poison_stats.poison_calls
-        expc = n_levels * (n_levels + 1) // 2
-        cyc = runs["spec"].cycles / runs["oracle"].cycles - 1
-        size = cu_size(comp.cu) / cu_size(ocomp.cu) - 1
+    for (n_levels, pb, pc, expc, cyc, size, spec_c, orc_c) in results:
         rows.append((n_levels, pb, pc, expc, cyc, size))
         print(f"{n_levels:2d} {pb:8d} {pc:8d} {expc:6d} "
-              f"{runs['spec'].cycles:8d} {runs['oracle'].cycles:8d} "
+              f"{spec_c:8d} {orc_c:8d} "
               f"{100*cyc:7.1f}% {100*size:10.1f}%")
     print("\npaper (Fig 7): perf overhead ~0%; area overhead grows a few "
           "percent per poison block, <25% at n=8")

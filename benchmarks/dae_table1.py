@@ -1,17 +1,61 @@
 """Table 1 / Figure 6 reproduction: STA, DAE, SPEC, ORACLE cycle counts,
 mis-speculation rates, poison block/call counts, and a code-size proxy for
 the paper's ALM area (CU+AGU instruction & block counts).
+
+The nine kernels are independent simulations, so they fan out across a
+process pool by default (``jobs=0`` → one worker per core); pass ``jobs=1``
+(or set ``DAE_BENCH_JOBS=1``) for the sequential path.  Results are
+byte-identical either way — each worker runs the same deterministic
+pipeline and rows are collected in kernel order.
 """
 from __future__ import annotations
 
 import json
-from typing import Dict
+import os
+from typing import Dict, Optional
 
 import numpy as np
 
 from repro.bench_irregular import ALL
 from repro.core import pipeline
 from repro.core.machine import MachineConfig
+
+
+def _resolve_jobs(jobs: Optional[int], n_tasks: int) -> int:
+    if jobs is None:
+        jobs = int(os.environ.get("DAE_BENCH_JOBS", "0"))
+    if jobs <= 0:
+        jobs = os.cpu_count() or 1
+    return max(1, min(jobs, n_tasks))
+
+
+def _pmap(fn, args, jobs, weights=None):
+    """Order-preserving map over a fork pool (sequential when jobs==1).
+
+    ``weights`` (heavier = dispatched first) avoids a long task landing
+    last on an otherwise-drained pool; results come back in input order.
+    """
+    if jobs == 1:
+        return [fn(a) for a in args]
+    import multiprocessing as mp
+    try:
+        ctx = mp.get_context("fork")  # inherit loaded modules, cheap spawn
+    except ValueError:  # pragma: no cover - non-fork platforms
+        return [fn(a) for a in args]
+    order = list(range(len(args)))
+    if weights is not None:
+        order.sort(key=lambda i: -weights[i])
+    with ctx.Pool(processes=jobs) as pool:
+        res = pool.map(fn, [args[i] for i in order], chunksize=1)
+    out = [None] * len(args)
+    for pos, i in enumerate(order):
+        out[i] = res[pos]
+    return out
+
+
+# rough relative simulation cost per kernel — a dispatch hint only
+_WEIGHTS = {"fw": 100, "sort": 50, "sssp": 40, "bc": 30, "bfs": 25,
+            "hist": 10, "mm": 8, "spmv": 6, "thr": 4}
 
 
 def code_size(fn) -> int:
@@ -51,8 +95,14 @@ def run_one(name: str, cfg: MachineConfig = None) -> Dict:
     return row
 
 
-def main(out_json: str = None):
-    rows = [run_one(n) for n in ALL]
+QUICK_BENCHES = ("hist", "thr", "mm", "spmv")  # the small kernels
+
+
+def main(out_json: str = None, jobs: Optional[int] = None,
+         benches=None):
+    names = [n for n in ALL if benches is None or n in benches]
+    rows = _pmap(run_one, names, _resolve_jobs(jobs, len(names)),
+                 weights=[_WEIGHTS.get(n, 1) for n in names])
     hdr = (f"{'bench':6s} {'STA':>8s} {'DAE':>8s} {'SPEC':>8s} {'ORACLE':>8s} "
            f"{'SPECvSTA':>9s} {'SPEC/ORC':>9s} {'mis%':>6s} {'pB':>3s} {'pC':>3s}")
     print(hdr)

@@ -19,13 +19,14 @@ BUILDERS = {
 }
 
 
-def main() -> Dict[str, List[int]]:
+def main(rates: List[float] = None) -> Dict[str, List[int]]:
+    rates = RATES if rates is None else rates
     out: Dict[str, List[int]] = {}
-    print(f"{'kernel':6s} " + " ".join(f"{int(100*r):>6d}%" for r in RATES)
+    print(f"{'kernel':6s} " + " ".join(f"{int(100*r):>6d}%" for r in rates)
           + f" {'sigma':>7s}")
     for name, build in BUILDERS.items():
         cycles = []
-        for r in RATES:
+        for r in rates:
             case = build(r)
             runs = pipeline.run_all(case.fn, case.decoupled, case.memory,
                                     variants=("spec",))

@@ -2,9 +2,17 @@
 
 Emits a ``name,us_per_call,derived`` CSV summary at the end (harness
 convention); `derived` carries the headline metric of each section.
+
+``--json OUT`` additionally writes the rows to a JSON file (e.g.
+``BENCH_machine.json``) so the perf trajectory is machine-readable across
+PRs.  ``--quick`` runs a reduced matrix (small kernels, shallow nesting,
+coarse rate sweep, no jax sections) that finishes in well under a minute —
+wired into ``make bench-quick``.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 
@@ -14,7 +22,25 @@ def _timed(fn):
     return out, (time.perf_counter() - t0) * 1e6
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", dest="json_out", metavar="OUT", default=None,
+                    help="write name/us_per_call/derived rows to a JSON file")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced matrix (<60 s): small kernels, shallow "
+                         "nesting, no jax sections")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="worker processes for the DAE sections "
+                         "(default: DAE_BENCH_JOBS or one per core; "
+                         "1 = sequential)")
+    args = ap.parse_args(argv)
+    quick = args.quick
+    if args.json_out:  # fail fast on an unwritable path, not after the
+        # run — append mode probes without clobbering the previous artifact
+        open(args.json_out, "a").close()
+    # the quick matrix is too small to amortize pool spawn — default to
+    # sequential there unless the caller asked for workers explicitly
+    jobs = args.jobs if args.jobs is not None else (1 if quick else None)
     rows = []
 
     from benchmarks import dae_table1, dae_table2, dae_fig7
@@ -22,7 +48,9 @@ def main() -> None:
     print("=" * 72)
     print("Table 1 / Figure 6 — STA vs DAE vs SPEC vs ORACLE")
     print("=" * 72)
-    t1, us1 = _timed(dae_table1.main)
+    t1, us1 = _timed(lambda: dae_table1.main(
+        jobs=jobs,
+        benches=dae_table1.QUICK_BENCHES if quick else None))
     hm = lambda xs: len(xs) / sum(1.0 / x for x in xs)
     spec_hm = hm([r["sta"] / r["spec"] for r in t1])
     rows.append(("dae_table1", us1, f"spec_hm_speedup={spec_hm:.2f}x"))
@@ -31,7 +59,8 @@ def main() -> None:
     print("=" * 72)
     print("Table 2 — mis-speculation-rate sweep (SPEC cycles)")
     print("=" * 72)
-    t2, us2 = _timed(dae_table2.main)
+    t2, us2 = _timed(lambda: dae_table2.main(
+        rates=[0.0, 0.6, 1.0] if quick else None))
     import statistics
     worst = max(statistics.pstdev(v) / statistics.mean(v)
                 for v in t2.values())
@@ -41,42 +70,51 @@ def main() -> None:
     print("=" * 72)
     print("Figure 7 — nested control flow scaling")
     print("=" * 72)
-    f7, us7 = _timed(dae_fig7.main)
+    f7, us7 = _timed(lambda: dae_fig7.main(
+        jobs=jobs, max_levels=4 if quick else 8))
     ok = all(pc == expc for (_, _, pc, expc, _, _) in f7)
     rows.append(("dae_fig7", us7, f"poison_call_formula_holds={ok}"))
 
-    # the paper's technique inside the LM framework: MoE dispatch A/B
-    print()
-    print("=" * 72)
-    print("MoE dispatch A/B — speculative (capacity+poison) vs dense")
-    print("=" * 72)
-    from benchmarks import moe_ab
-    ab, usab = _timed(moe_ab.main)
-    rows.append(("moe_ab", usab, ab))
+    if not quick:
+        # the paper's technique inside the LM framework: MoE dispatch A/B
+        print()
+        print("=" * 72)
+        print("MoE dispatch A/B — speculative (capacity+poison) vs dense")
+        print("=" * 72)
+        from benchmarks import moe_ab
+        ab, usab = _timed(moe_ab.main)
+        rows.append(("moe_ab", usab, ab))
 
-    print()
-    print("=" * 72)
-    print("Kernel micro-benches (Pallas interpret vs jnp reference)")
-    print("=" * 72)
-    try:
-        from benchmarks import kernel_bench
-        kb, usk = _timed(kernel_bench.main)
-        rows.append(("kernel_bench", usk, kb))
-    except ImportError:
-        pass
+        print()
+        print("=" * 72)
+        print("Kernel micro-benches (Pallas interpret vs jnp reference)")
+        print("=" * 72)
+        try:
+            from benchmarks import kernel_bench
+            kb, usk = _timed(kernel_bench.main)
+            rows.append(("kernel_bench", usk, kb))
+        except ImportError:
+            pass
 
-    # roofline summary from the latest dry-run artifacts, if present
-    try:
-        from benchmarks import roofline_report
-        rr, usr = _timed(roofline_report.main)
-        rows.append(("roofline_report", usr, rr))
-    except ImportError:
-        pass
+        # roofline summary from the latest dry-run artifacts, if present
+        try:
+            from benchmarks import roofline_report
+            rr, usr = _timed(roofline_report.main)
+            rows.append(("roofline_report", usr, rr))
+        except ImportError:
+            pass
 
     print()
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")
+
+    if args.json_out:
+        payload = [{"name": name, "us_per_call": round(us, 1),
+                    "derived": str(derived)} for name, us, derived in rows]
+        with open(args.json_out, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"\nwrote {len(payload)} rows to {args.json_out}")
 
 
 if __name__ == "__main__":

@@ -54,7 +54,17 @@ class InterpError(RuntimeError):
 def run(fn: Function, memory: Dict[str, np.ndarray],
         params: Optional[Dict[str, Any]] = None,
         max_steps: int = 2_000_000) -> Trace:
-    """Execute ``fn`` sequentially, mutating ``memory`` in place."""
+    """Execute ``fn`` sequentially, mutating ``memory`` in place.
+
+    Functions in the sequential op set run through the compiled fast path
+    (:func:`repro.core.sim.compile.compile_interp` — bit-identical traces
+    and final memory); DAE ops fall through to the interpreter below,
+    which rejects them with the usual InterpError.
+    """
+    from .sim.compile import compile_interp
+    fast = compile_interp(fn)
+    if fast is not None:
+        return fast(memory, dict(params or {}), max_steps, Trace())
     env: Dict[str, Any] = dict(params or {})
     regs: Dict[str, Any] = {}
     trace = Trace()

@@ -1,4 +1,4 @@
-"""Cycle-approximate machine model of the paper's DAE architecture (§8.1).
+"""Machine model of the paper's DAE architecture (§8.1) — event-driven.
 
 Three communicating processes per the Fig. 1 template:
 
@@ -18,474 +18,57 @@ All FIFOs are bounded and have a transfer latency, so back-pressure and
 round-trip costs emerge naturally (the DAE-without-speculation slowdown of
 Fig. 6 is the coupling of the AGU to the CU through full/empty queues).
 
+Engine
+------
+The simulation is **event-driven** (:mod:`repro.core.sim`): units advance in
+bursts until they block on a FIFO full/empty or memory-latency condition,
+park on the event queue, and time jumps straight to the next
+``(ready_cycle, unit)`` wakeup instead of ticking through idle cycles.  The
+model is cycle-exact: it produces bit-identical cycle counts, poison/commit
+counts, load counts, and store traces to the original cycle-stepped
+implementation (kept as the golden oracle in
+``tests/ref_machine_cyclestep.py`` and asserted against in
+``tests/test_sim_equivalence.py``).
+
+Invariants the event wiring preserves (and that any new unit must also
+honour — see :mod:`repro.core.sim.events` for why):
+
+* **FIFO back-pressure** — every FIFO is bounded; a full FIFO parks the
+  producer, an empty one parks the consumer, and each push/pop edge
+  schedules the wakeup of whoever it might unblock.
+* **In-order delivery** — load values and AGU sync responses leave the LSQ
+  in request order; stores commit in order at one per cycle.
+* **No-replay poison retirement** — a poisoned store consumes its queue
+  slot and retires without writing; requests are never re-issued.
+* **Phase order** — within one simulated cycle, AGU runs before CU, and all
+  LSQs tick after both slices.  A push landing in cycle *t* is observable
+  by a later phase of *t* but only by earlier phases at *t + 1*.
+
+Adding a new unit means: give it a ``wake`` attribute, run it from
+``sim.units.Machine.run`` in a fixed phase position, and make sure every
+state change that could unblock it schedules a wakeup (a spurious wakeup is
+harmless; a missed one breaks cycle-exactness).
+
 ``run_sta`` models the industry-HLS static baseline: if-converted in-order
 issue with width ``sta_width``, loads conservatively ordered behind every
 older same-array store commit ("loads that cannot be disambiguated at compile
-time execute in order", §8.1.1).
-
-The simulation is cycle-stepped; slice processes are Python generators that
-yield once per simulated cycle.
+time execute in order", §8.1.1).  It is a one-pass analytic schedule, not a
+simulation, and lives here unchanged.
 """
 from __future__ import annotations
 
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Dict, Generator, List, Optional, Set, Tuple
+from typing import Any, Dict, Optional
 
 import numpy as np
 
 from .interp import eval_binop
-from .ir import Function, Instr
+from .ir import Function
+from .sim import (Deadlock, EventQueue, Fifo, LSQ, Machine, MachineConfig,
+                  MachineResult, POISON, SliceProc, run_dae)
 
-
-@dataclass
-class MachineConfig:
-    mem_lat: int = 4           # on-chip SRAM read latency (pipelined, §8.1)
-    fifo_lat: int = 4          # FIFO traversal latency (inter-unit crossing)
-    fifo_depth: int = 8        # request/value FIFO capacity
-    ldq: int = 4               # LSQ load-queue entries (paper §8.1)
-    stq: int = 32              # LSQ store-queue entries (paper §8.1)
-    width: int = 4             # per-slice instructions retired per cycle
-    sta_width: int = 8         # STA issue width (spatial datapath ILP)
-    max_cycles: int = 20_000_000
-
-
-@dataclass
-class MachineResult:
-    cycles: int
-    stores_committed: int = 0
-    stores_poisoned: int = 0
-    loads_served: int = 0
-    sync_waits: int = 0
-    store_trace: Dict[str, List[Tuple[int, Any]]] = field(default_factory=dict)
-    lsq_high_water: int = 0
-
-    @property
-    def misspec_rate(self) -> float:
-        tot = self.stores_committed + self.stores_poisoned
-        return self.stores_poisoned / tot if tot else 0.0
-
-
-class Deadlock(RuntimeError):
-    pass
-
-
-POISON = object()  # kill-token sentinel in the store-value FIFO
-
-
-# ---------------------------------------------------------------------------
-# Bounded FIFO with latency
-# ---------------------------------------------------------------------------
-
-
-class Fifo:
-    __slots__ = ("q", "depth", "lat", "name")
-
-    def __init__(self, name: str, depth: int, lat: int):
-        self.q: deque = deque()
-        self.depth = depth
-        self.lat = lat
-        self.name = name
-
-    def can_push(self) -> bool:
-        return len(self.q) < self.depth
-
-    def push(self, now: int, item: Any) -> None:
-        self.q.append((now + self.lat, item))
-
-    def can_pop(self, now: int) -> bool:
-        return bool(self.q) and self.q[0][0] <= now
-
-    def pop(self) -> Any:
-        return self.q.popleft()[1]
-
-    def __len__(self) -> int:
-        return len(self.q)
-
-
-# ---------------------------------------------------------------------------
-# Load-store queue (one per decoupled array)
-# ---------------------------------------------------------------------------
-
-
-class LSQ:
-    def __init__(self, array: str, mem: np.ndarray, cfg: MachineConfig,
-                 res: MachineResult):
-        self.array = array
-        self.mem = mem
-        self.cfg = cfg
-        self.res = res
-        self.seq = 0
-        self.loads: deque = deque()   # dict entries, arrival order
-        self.stores: deque = deque()  # dict entries, arrival order
-        # FIFOs (filled in by the Machine)
-        self.req: Fifo = None  # type: ignore[assignment]
-        self.ld_val: Fifo = None  # type: ignore[assignment]
-        self.agu_resp: Fifo = None  # type: ignore[assignment]
-        self.st_val: Fifo = None  # type: ignore[assignment]
-
-    def tick(self, now: int) -> bool:
-        """One DU cycle; returns True if any progress was made."""
-        busy = False
-
-        # 1. accept one request from the AGU
-        if self.req.can_pop(now):
-            kind, addr, sync = self.req.q[0][1]
-            if kind == "ld" and len(self.loads) < self.cfg.ldq:
-                self.req.pop()
-                self.loads.append(dict(seq=self.seq, addr=addr, sync=sync,
-                                       done=None, value=None))
-                self.seq += 1
-                busy = True
-            elif kind == "st" and len(self.stores) < self.cfg.stq:
-                self.req.pop()
-                self.stores.append(dict(seq=self.seq, addr=addr, value=None,
-                                        poison=False, has_value=False))
-                self.seq += 1
-                busy = True
-
-        # 2. accept one store value / poison token from the CU
-        if self.st_val.can_pop(now):
-            for st in self.stores:
-                if not st["has_value"]:
-                    tok = self.st_val.pop()
-                    st["has_value"] = True
-                    if tok is POISON:
-                        st["poison"] = True
-                    else:
-                        st["value"] = tok
-                    busy = True
-                    break
-
-        # 3. load issue / forward (1 memory read port + 1 forwarding bypass)
-        issued_read = False
-        forwarded = False
-        for ld in self.loads:
-            if ld["done"] is not None:
-                continue
-            hit, stall, value = self._disambiguate(ld)
-            if stall:
-                continue  # OoO: younger loads may still proceed
-            if hit:
-                if not forwarded:
-                    ld["done"] = now + 1
-                    ld["value"] = value
-                    forwarded = True
-                    busy = True
-            else:
-                if not issued_read:
-                    a = int(ld["addr"])
-                    a = min(max(a, 0), len(self.mem) - 1)  # speculative clamp
-                    ld["done"] = now + self.cfg.mem_lat
-                    ld["value"] = self.mem[a].item()
-                    issued_read = True
-                    busy = True
-
-        # 4. in-order delivery of completed loads
-        if self.loads:
-            ld = self.loads[0]
-            if ld["done"] is not None and ld["done"] <= now:
-                ok = self.ld_val.can_push() and (
-                    not ld["sync"] or self.agu_resp.can_push())
-                if ok:
-                    self.ld_val.push(now, ld["value"])
-                    if ld["sync"]:
-                        self.agu_resp.push(now, ld["value"])
-                    self.loads.popleft()
-                    self.res.loads_served += 1
-                    busy = True
-
-        # 5. in-order store commit (1 write port)
-        if self.stores:
-            st = self.stores[0]
-            if st["has_value"]:
-                if st["poison"]:
-                    self.res.stores_poisoned += 1
-                else:
-                    a = int(st["addr"])
-                    if not (0 <= a < len(self.mem)):
-                        raise RuntimeError(
-                            f"non-poisoned store out of bounds: "
-                            f"{self.array}[{a}]")
-                    self.mem[a] = st["value"]
-                    self.res.stores_committed += 1
-                    self.res.store_trace.setdefault(self.array, []).append(
-                        (a, st["value"]))
-                self.stores.popleft()
-                busy = True
-
-        occ = len(self.loads) + len(self.stores)
-        self.res.lsq_high_water = max(self.res.lsq_high_water, occ)
-        return busy
-
-    def _disambiguate(self, ld: Dict) -> Tuple[bool, bool, Any]:
-        """RAW check against older stores.  Returns (forward_hit, stall, val).
-
-        Scans older stores youngest-first: an address match with a known
-        non-poisoned value forwards; a poisoned match is skipped (never
-        committed); an unknown value stalls the load (may alias).  Unknown
-        *addresses* cannot occur — the request FIFO delivers in program
-        order, so every older store's address is already here.
-        """
-        for st in reversed(self.stores):
-            if st["seq"] > ld["seq"]:
-                continue
-            if st["addr"] != ld["addr"]:
-                continue
-            if not st["has_value"]:
-                return False, True, None
-            if st["poison"]:
-                continue
-            return True, False, st["value"]
-        return False, False, None
-
-    def drained(self) -> bool:
-        return (not self.loads and not self.stores and not len(self.req)
-                and not len(self.st_val) and not len(self.ld_val)
-                and not len(self.agu_resp))
-
-
-# ---------------------------------------------------------------------------
-# Slice processes (AGU / CU)
-# ---------------------------------------------------------------------------
-
-
-class SliceProc:
-    """Executes one slice; a generator yields once per simulated cycle."""
-
-    def __init__(self, name: str, fn: Function, params: Dict[str, Any],
-                 local_mem: Dict[str, np.ndarray], lsqs: Dict[str, "LSQ"],
-                 cfg: MachineConfig, res: MachineResult, is_agu: bool):
-        self.name = name
-        self.fn = fn
-        self.env: Dict[str, Any] = dict(params)
-        self.regs: Dict[str, Any] = {}
-        self.local = local_mem
-        self.lsqs = lsqs
-        self.cfg = cfg
-        self.res = res
-        self.is_agu = is_agu
-        self.done = False
-        self.blocked_on = ""
-
-    def now(self) -> int:
-        return self._now
-
-    def run(self) -> Generator[None, None, None]:
-        self._now = 0
-        env, regs = self.env, self.regs
-        cur = self.fn.entry
-        prev: Optional[str] = None
-        budget = self.cfg.width
-
-        def step():  # one simulated cycle
-            nonlocal budget
-            budget = self.cfg.width
-            return None
-
-        while True:
-            blk = self.fn.blocks[cur]
-            if blk.phis:
-                vals = {}
-                for p in blk.phis:
-                    for (pb, v) in p.args:
-                        if pb == prev:
-                            vals[p.dest] = env.get(v)
-                            break
-                    else:
-                        raise RuntimeError(
-                            f"{self.name}: phi {p.dest} in {cur}: "
-                            f"no incoming for {prev}")
-                env.update(vals)
-
-            for instr in blk.body:
-                cost = 0 if instr.op in ("const", "getreg", "setreg") else 1
-                if budget < cost:
-                    yield step()
-                budget -= cost
-                op = instr.op
-                if op == "const":
-                    env[instr.dest] = instr.args[0]
-                elif op == "bin":
-                    o, a, b = instr.args
-                    env[instr.dest] = eval_binop(o, _v(env, a), _v(env, b))
-                elif op == "select":
-                    c, t, f = instr.args
-                    env[instr.dest] = _v(env, t) if _v(env, c) else _v(env, f)
-                elif op == "load":
-                    a = int(_v(env, instr.args[0]))
-                    arr = self.local[instr.array]
-                    a = min(max(a, 0), len(arr) - 1)
-                    env[instr.dest] = arr[a].item()
-                elif op == "store":
-                    arr = self.local[instr.array]
-                    a = int(_v(env, instr.args[0]))
-                    if 0 <= a < len(arr):
-                        arr[a] = _v(env, instr.args[1])
-                elif op == "setreg":
-                    regs[instr.args[0]] = (instr.meta["imm"]
-                                           if "imm" in instr.meta
-                                           else _v(env, instr.args[1]))
-                elif op == "getreg":
-                    env[instr.dest] = regs.get(instr.args[0], 0)
-                elif op == "send_ld":
-                    lsq = self.lsqs[instr.array]
-                    self.blocked_on = f"send_ld {instr.array}"
-                    while not lsq.req.can_push():
-                        yield step()
-                    sync = bool(instr.meta.get("sync"))
-                    lsq.req.push(self._now, ("ld", int(_v(env, instr.args[0])),
-                                             sync))
-                    if sync:
-                        self.res.sync_waits += 1
-                        self.blocked_on = f"sync_resp {instr.array}"
-                        while not lsq.agu_resp.can_pop(self._now):
-                            yield step()
-                        env[instr.dest] = lsq.agu_resp.pop()
-                    self.blocked_on = ""
-                elif op == "send_st":
-                    lsq = self.lsqs[instr.array]
-                    self.blocked_on = f"send_st {instr.array}"
-                    while not lsq.req.can_push():
-                        yield step()
-                    lsq.req.push(self._now, ("st", int(_v(env, instr.args[0])),
-                                             False))
-                    self.blocked_on = ""
-                elif op == "consume_ld":
-                    lsq = self.lsqs[instr.array]
-                    self.blocked_on = f"consume_ld {instr.array}"
-                    while not lsq.ld_val.can_pop(self._now):
-                        yield step()
-                    env[instr.dest] = lsq.ld_val.pop()
-                    self.blocked_on = ""
-                elif op == "produce_st":
-                    lsq = self.lsqs[instr.array]
-                    self.blocked_on = f"produce_st {instr.array}"
-                    while not lsq.st_val.can_push():
-                        yield step()
-                    lsq.st_val.push(self._now, _v(env, instr.args[0]))
-                    self.blocked_on = ""
-                elif op == "poison_st":
-                    pr = instr.meta.get("pred_reg")
-                    if pr is not None and not regs.get(pr, 0):
-                        budget += 1  # predicated off: free
-                        continue
-                    lsq = self.lsqs[instr.array]
-                    self.blocked_on = f"poison_st {instr.array}"
-                    while not lsq.st_val.can_push():
-                        yield step()
-                    lsq.st_val.push(self._now, POISON)
-                    self.blocked_on = ""
-                elif op == "print":
-                    pass
-                else:
-                    raise RuntimeError(f"{self.name}: bad op {op}")
-
-            term = blk.term
-            if term.kind == "ret":
-                self.done = True
-                return
-            if not blk.synthetic:
-                prev = cur
-            if term.kind == "br":
-                cur = term.targets[0]
-            else:
-                cur = term.targets[0 if bool(env[term.cond]) else 1]
-            yield step()  # block boundary
-
-
-def _v(env: Dict[str, Any], a: Any) -> Any:
-    return env[a] if isinstance(a, str) else a
-
-
-# ---------------------------------------------------------------------------
-# The machine: AGU + DU + CU
-# ---------------------------------------------------------------------------
-
-
-def run_dae(agu: Function, cu: Function, memory: Dict[str, np.ndarray],
-            decoupled: Set[str], params: Optional[Dict[str, Any]] = None,
-            cfg: Optional[MachineConfig] = None) -> MachineResult:
-    """Simulate the decoupled pair against ``memory`` (mutated in place).
-
-    Decoupled arrays live behind their LSQ; other arrays are private per
-    slice (each slice keeps its own coherent copy, see decouple()).  On
-    return, ``memory`` holds the DU state for decoupled arrays and the CU
-    state for the rest.
-    """
-    cfg = cfg or MachineConfig()
-    params = dict(params or {})
-    res = MachineResult(cycles=0)
-
-    lsqs: Dict[str, LSQ] = {}
-    for a in sorted(decoupled):
-        lsq = LSQ(a, memory[a], cfg, res)
-        lsq.req = Fifo(f"{a}.req", cfg.fifo_depth, cfg.fifo_lat)
-        lsq.ld_val = Fifo(f"{a}.ldval", cfg.fifo_depth, cfg.fifo_lat)
-        lsq.agu_resp = Fifo(f"{a}.resp", cfg.fifo_depth, cfg.fifo_lat)
-        lsq.st_val = Fifo(f"{a}.stval", cfg.fifo_depth, cfg.fifo_lat)
-        lsqs[a] = lsq
-
-    agu_local = {a: memory[a].copy() for a in memory if a not in decoupled}
-    cu_local = {a: memory[a] for a in memory if a not in decoupled}
-
-    agu_p = SliceProc("AGU", agu, params, agu_local, lsqs, cfg, res, True)
-    cu_p = SliceProc("CU", cu, params, cu_local, lsqs, cfg, res, False)
-    agu_g = agu_p.run()
-    cu_g = cu_p.run()
-
-    now = 0
-    idle = 0
-    while True:
-        agu_p._now = cu_p._now = now
-        progressed = False
-        if not agu_p.done:
-            try:
-                next(agu_g)
-            except StopIteration:
-                pass
-            progressed = True
-        if not cu_p.done:
-            try:
-                next(cu_g)
-            except StopIteration:
-                pass
-            progressed = True
-        du_busy = False
-        for lsq in lsqs.values():
-            du_busy |= lsq.tick(now)
-
-        if agu_p.done and cu_p.done and all(l.drained() for l in lsqs.values()):
-            res.cycles = now
-            return res
-
-        if not du_busy and agu_p.done and cu_p.done:
-            idle += 1
-            if idle > 4 * (cfg.mem_lat + cfg.fifo_lat) + 64:
-                raise Deadlock(_diag(agu_p, cu_p, lsqs, now))
-        elif not du_busy and (agu_p.blocked_on and cu_p.blocked_on):
-            idle += 1
-            if idle > 4 * (cfg.mem_lat + cfg.fifo_lat) + 64:
-                raise Deadlock(_diag(agu_p, cu_p, lsqs, now))
-        else:
-            idle = 0
-
-        now += 1
-        if now > cfg.max_cycles:
-            raise Deadlock("cycle budget exceeded: " +
-                           _diag(agu_p, cu_p, lsqs, now))
-
-
-def _diag(agu_p: SliceProc, cu_p: SliceProc, lsqs: Dict[str, LSQ],
-          now: int) -> str:
-    lines = [f"deadlock at cycle {now}:",
-             f"  AGU done={agu_p.done} blocked={agu_p.blocked_on!r}",
-             f"  CU  done={cu_p.done} blocked={cu_p.blocked_on!r}"]
-    for a, l in lsqs.items():
-        lines.append(f"  LSQ[{a}] loads={len(l.loads)} stores={len(l.stores)}"
-                     f" req={len(l.req)} ldval={len(l.ld_val)}"
-                     f" stval={len(l.st_val)} resp={len(l.agu_resp)}")
-    return "\n".join(lines)
+__all__ = ["Deadlock", "EventQueue", "Fifo", "LSQ", "Machine",
+           "MachineConfig", "MachineResult", "POISON", "SliceProc",
+           "run_dae", "run_sta"]
 
 
 # ---------------------------------------------------------------------------
@@ -498,8 +81,17 @@ def run_sta(fn: Function, memory: Dict[str, np.ndarray],
             cfg: Optional[MachineConfig] = None) -> MachineResult:
     """Static-scheduling model (§8.1.1 STA): in-order issue of width
     ``sta_width``; every load waits for all older same-array store commits
-    (no dynamic disambiguation); dataflow latencies otherwise overlap."""
+    (no dynamic disambiguation); dataflow latencies otherwise overlap.
+
+    Functions in the STA op set run through the compiled fast path
+    (:func:`repro.core.sim.compile.compile_sta` — bit-identical schedule);
+    anything else falls through to the interpreted model below.
+    """
     cfg = cfg or MachineConfig()
+    from .sim.compile import compile_sta
+    fast = compile_sta(fn)
+    if fast is not None:
+        return fast(memory, dict(params or {}), cfg)
     env: Dict[str, Any] = dict(params or {})
     regs: Dict[str, Any] = {}
     res = MachineResult(cycles=0)
@@ -589,3 +181,7 @@ def run_sta(fn: Function, memory: Dict[str, np.ndarray],
             # readiness) and the in-order same-array load/store discipline
             # gate the static schedule.
             cur = term.targets[0 if bool(env[term.cond]) else 1]
+
+
+def _v(env: Dict[str, Any], a: Any) -> Any:
+    return env[a] if isinstance(a, str) else a

@@ -117,13 +117,14 @@ def run_all(fn: Function, decoupled: Set[str],
             memory: Dict[str, np.ndarray],
             params: Optional[Dict[str, Any]] = None,
             cfg: Optional[machine.MachineConfig] = None,
-            variants: Tuple[str, ...] = ("sta", "dae", "spec", "oracle"),
+            variants: Tuple[str, ...] = ("ref", "sta", "dae", "spec",
+                                         "oracle"),
             ) -> Dict[str, VariantRun]:
     """Compile and simulate the requested variants on copies of ``memory``."""
     cfg = cfg or machine.MachineConfig()
     out: Dict[str, VariantRun] = {}
 
-    if "ref" in variants or True:  # the oracle-of-oracles: pure interpreter
+    if "ref" in variants:  # the oracle-of-oracles: pure interpreter
         mem = {k: v.copy() for k, v in memory.items()}
         tr = interp_run(fn, mem, params)
         out["ref"] = VariantRun("ref", tr.instr_count, mem, tr)

@@ -1,0 +1,21 @@
+"""Event-driven simulation core for the DAE machine model.
+
+Layout:
+
+* :mod:`~repro.core.sim.base`   — ``MachineConfig`` / ``MachineResult`` /
+  ``Deadlock`` / ``POISON`` (the API types).
+* :mod:`~repro.core.sim.events` — the ``(ready_cycle, unit)`` wakeup heap.
+* :mod:`~repro.core.sim.fifo`   — bounded latency-FIFOs with wakeup edges.
+* :mod:`~repro.core.sim.units`  — AGU/CU slice processes, the per-array
+  LSQ (DU), and the :class:`~repro.core.sim.units.Machine` event loop.
+
+The public entry point is :func:`repro.core.machine.run_dae`, which fronts
+this package.
+"""
+from .base import Deadlock, MachineConfig, MachineResult, POISON
+from .events import INF, EventQueue
+from .fifo import Fifo
+from .units import LSQ, Machine, SliceProc, run_dae
+
+__all__ = ["Deadlock", "MachineConfig", "MachineResult", "POISON", "INF",
+           "EventQueue", "Fifo", "LSQ", "Machine", "SliceProc", "run_dae"]

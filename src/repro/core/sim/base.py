@@ -1,0 +1,44 @@
+"""Shared machine-model types: configuration, results, sentinels.
+
+These are the public API surface re-exported by :mod:`repro.core.machine`;
+the event-driven engine (``events``/``fifo``/``units``) builds on them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Tuple
+
+
+@dataclass
+class MachineConfig:
+    mem_lat: int = 4           # on-chip SRAM read latency (pipelined, §8.1)
+    fifo_lat: int = 4          # FIFO traversal latency (inter-unit crossing)
+    fifo_depth: int = 8        # request/value FIFO capacity
+    ldq: int = 4               # LSQ load-queue entries (paper §8.1)
+    stq: int = 32              # LSQ store-queue entries (paper §8.1)
+    width: int = 4             # per-slice instructions retired per cycle
+    sta_width: int = 8         # STA issue width (spatial datapath ILP)
+    max_cycles: int = 20_000_000
+
+
+@dataclass
+class MachineResult:
+    cycles: int
+    stores_committed: int = 0
+    stores_poisoned: int = 0
+    loads_served: int = 0
+    sync_waits: int = 0
+    store_trace: Dict[str, List[Tuple[int, Any]]] = field(default_factory=dict)
+    lsq_high_water: int = 0
+
+    @property
+    def misspec_rate(self) -> float:
+        tot = self.stores_committed + self.stores_poisoned
+        return self.stores_poisoned / tot if tot else 0.0
+
+
+class Deadlock(RuntimeError):
+    pass
+
+
+POISON = object()  # kill-token sentinel in the store-value FIFO

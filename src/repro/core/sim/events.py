@@ -1,0 +1,59 @@
+"""Event scheduler: ``(ready_cycle, unit)`` wakeups.
+
+Time advances by jumping straight to the earliest pending wakeup instead of
+ticking through idle cycles.  Correctness rests on one invariant, shared
+with the cycle-stepped reference model:
+
+* a **spurious** wakeup (running a unit in a cycle where it makes no
+  progress) is always harmless — it is exactly what the reference model
+  does every cycle, and a no-op run changes no state;
+* a **missed** wakeup (failing to run a unit in a cycle where the reference
+  model would have made progress) is the only way to diverge.
+
+So every state mutation that can unblock a unit must schedule a wakeup for
+it (see :mod:`repro.core.sim.fifo` for the FIFO-edge wiring), and wakeups
+may be scheduled generously.
+
+Units carry a ``wake`` attribute (their earliest pending wakeup cycle, or
+``INF``).  ``schedule`` only ever *lowers* ``wake``; a unit's ``wake`` is
+reset to ``INF`` by the machine loop when the unit runs.
+
+Implementation note: this began life as a heap of ``(ready_cycle, seq,
+unit)`` entries with lazy invalidation, but a DAE machine has only a
+handful of units (two slice processes plus one LSQ per decoupled array —
+rarely more than four in the paper's workloads), so ``next_cycle`` is a
+linear min-scan over the registered units: cheaper than heap maintenance
+at these sizes, with the same scheduler interface.  Hot paths (the FIFO
+edges) update ``unit.wake`` directly — the inlined form of ``schedule``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+INF = float("inf")
+
+
+class EventQueue:
+    """Earliest-wakeup scheduler over a fixed set of registered units."""
+
+    __slots__ = ("units",)
+
+    def __init__(self) -> None:
+        self.units: List[object] = []
+
+    def register(self, unit) -> None:
+        self.units.append(unit)
+
+    def schedule(self, unit, cycle) -> None:
+        """Request that ``unit`` run no later than ``cycle``."""
+        if cycle < unit.wake:
+            unit.wake = cycle
+
+    def next_cycle(self) -> Optional[float]:
+        """Earliest pending wakeup cycle, or None if none pending."""
+        w = INF
+        for u in self.units:
+            uw = u.wake
+            if uw < w:
+                w = uw
+        return None if w is INF else w

@@ -1,0 +1,78 @@
+"""Bounded latency-FIFOs with wakeup edges.
+
+Each FIFO knows the two ends of its wire and lowers the ``wake`` cycle of
+whoever a state change might unblock (the inlined fast path of
+``EventQueue.schedule`` — see :mod:`repro.core.sim.events`):
+
+* ``push`` makes the item poppable at ``now + lat`` — the owning LSQ (for
+  request / store-value FIFOs) is woken for that cycle, and any slice
+  process parked waiting to pop is woken at ``max(now + 1, now + lat)``
+  (a process's phase in cycle ``now`` has already run by the time a push
+  from the LSQ phase lands, so it can observe the item next cycle at the
+  earliest — matching the AGU→CU→DU phase order of the reference model).
+* ``pop`` frees a slot — any process parked waiting to push is woken at
+  ``now + 1`` (same phase-order argument), and the owning LSQ (for
+  load-value / response FIFOs) is woken at ``now`` since the DU phase runs
+  after the slice phases and can use the freed slot the same cycle.
+
+Timestamps ride with the items: the queue holds ``(arrival_cycle, item)``.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, List
+
+
+class Fifo:
+    __slots__ = ("q", "depth", "lat", "name", "lsq", "lsq_on_push",
+                 "lsq_on_pop", "push_waiters", "pop_waiters")
+
+    def __init__(self, name: str, depth: int, lat: int):
+        self.q: deque = deque()
+        self.depth = depth
+        self.lat = lat
+        self.name = name
+        self.lsq = None           # owning LSQ unit (wired by the Machine)
+        self.lsq_on_push = False  # LSQ is the reader (req / st_val)
+        self.lsq_on_pop = False   # LSQ is the writer (ld_val / agu_resp)
+        self.push_waiters: List[Any] = []  # procs parked on can_push
+        self.pop_waiters: List[Any] = []   # procs parked on can_pop
+
+    def can_push(self) -> bool:
+        return len(self.q) < self.depth
+
+    def push(self, now: int, item: Any) -> None:
+        arrival = now + self.lat
+        self.q.append((arrival, item))
+        if self.lsq_on_push:
+            lsq = self.lsq
+            if arrival < lsq.wake:
+                lsq.wake = arrival
+        w = self.pop_waiters
+        if w:
+            t = arrival if arrival > now else now + 1
+            for p in w:
+                if t < p.wake:
+                    p.wake = t
+            del w[:]
+
+    def can_pop(self, now: int) -> bool:
+        return bool(self.q) and self.q[0][0] <= now
+
+    def pop(self, now: int) -> Any:
+        item = self.q.popleft()[1]
+        if self.lsq_on_pop:
+            lsq = self.lsq
+            if now < lsq.wake:
+                lsq.wake = now
+        w = self.push_waiters
+        if w:
+            t = now + 1
+            for p in w:
+                if t < p.wake:
+                    p.wake = t
+            del w[:]
+        return item
+
+    def __len__(self) -> int:
+        return len(self.q)

@@ -1,0 +1,13 @@
+"""Backend policy shared by the Pallas kernels.
+
+One place decides when a kernel defaults to interpret mode, so a future
+change (GPU handling, an env override) applies to every kernel at once.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Compiled Pallas on TPU; interpret mode elsewhere (CPU/GPU CI)."""
+    return jax.default_backend() != "tpu"

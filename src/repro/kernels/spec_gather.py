@@ -4,17 +4,21 @@ The paper's DAE template mapped onto the TPU memory system:
 
 * **AGU**: the row indices are *scalar-prefetched*
   (``PrefetchScalarGridSpec``) — the scalar core reads them ahead of the
-  grid and drives the ``BlockSpec.index_map``, so the DMA engine (the DU)
-  issues HBM→VMEM row fetches ahead of compute.  A poisoned request
-  (``idx < 0``) still fetches a (clamped) row — requests are speculative and
-  never replayed.
+  grid, so the DMA engine (the DU) issues HBM→VMEM row fetches ahead of
+  compute.  A poisoned request (``idx < 0``) still fetches a (clamped)
+  row — requests are speculative and never replayed.
 * **CU**: the kernel body applies the poison mask, zeroing mis-speculated
   rows — the predicated-store/`store_inv` analogue (§3.1).
 
-Block layout: grid ``(n_idx, d // block_d)``; each step copies one
-``(1, block_d)`` tile of the selected table row.  The feature dim is tiled
-to keep the VMEM working set bounded for wide rows; rows stream with
-double-buffered DMA.
+Block layout: grid ``(n // block_n, d // block_d)``; each step gathers a
+``(block_n, block_d)`` tile.  The table stays un-blocked in ``ANY`` memory
+space and the scalar-prefetched index drives a *burst* of ``block_n``
+row-slice DMAs into a VMEM scratch tile (all started, then all awaited, so
+the copies overlap), after which the poison mask is applied per-row inside
+the tile.  The feature dim is tiled to keep the VMEM working set bounded
+for wide rows.  ``n`` not divisible by ``block_n`` is handled by padding
+the index vector with poison (``-1``) — padded rows fetch row 0 and mask
+to zero, and the pad is sliced off the output.
 """
 from __future__ import annotations
 
@@ -25,35 +29,61 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _kernel(idx_ref, table_ref, out_ref):
-    i = pl.program_id(0)
-    poison = idx_ref[i] < 0
-    row = table_ref[...]
-    out_ref[...] = jnp.where(poison, jnp.zeros_like(row), row)
+from .backend import default_interpret
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def _kernel(idx_ref, table_ref, out_ref, scratch, sems, *, block_n, block_d):
+    nb = pl.program_id(0)
+    j = pl.program_id(1)
+    base = nb * block_n
+    # burst: start all row DMAs, then wait — copies overlap in the DMA
+    # engine (the multi-request window of the paper's DU)
+    dmas = []
+    for r in range(block_n):
+        row = jnp.maximum(idx_ref[base + r], 0)
+        dma = pltpu.make_async_copy(
+            table_ref.at[row, pl.ds(j * block_d, block_d)],
+            scratch.at[r], sems.at[r])
+        dma.start()
+        dmas.append(dma)
+    for dma in dmas:
+        dma.wait()
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0) + base
+    poison = (idx_ref[rows] < 0)[:, None]
+    out_ref[...] = jnp.where(poison, jnp.zeros_like(scratch[...]),
+                             scratch[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_d", "block_n", "interpret"))
 def spec_gather(table: jax.Array, idx: jax.Array, *, block_d: int = 512,
-                interpret: bool = True) -> jax.Array:
+                block_n: int = 8, interpret: bool | None = None) -> jax.Array:
     """Gather ``table[idx]`` with poisoned (negative) indices zeroed."""
+    if interpret is None:
+        interpret = default_interpret()
     n = idx.shape[0]
     v, d = table.shape
     bd = min(block_d, d)
+    bn = min(block_n, n)
     assert d % bd == 0, f"feature dim {d} not divisible by block {bd}"
+
+    pad = (-n) % bn
+    if pad:
+        idx = jnp.concatenate([idx, jnp.full((pad,), -1, idx.dtype)])
+    np_ = n + pad
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n, d // bd),
-        in_specs=[
-            pl.BlockSpec((1, bd),
-                         lambda i, j, idx_ref: (jnp.maximum(idx_ref[i], 0), j)),
-        ],
-        out_specs=pl.BlockSpec((1, bd), lambda i, j, idx_ref: (i, j)),
+        grid=(np_ // bn, d // bd),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j, idx_ref: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bn, bd), table.dtype),
+                        pltpu.SemaphoreType.DMA((bn,))],
     )
-    return pl.pallas_call(
-        _kernel,
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_n=bn, block_d=bd),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        out_shape=jax.ShapeDtypeStruct((np_, d), table.dtype),
         interpret=interpret,
     )(idx, table)
+    return out[:n] if pad else out

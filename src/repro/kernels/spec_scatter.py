@@ -2,15 +2,19 @@
 
 The predicated-store half of the paper's architecture (§3.1): every store
 request reaches the memory system (speculation), but a poisoned request
-(``idx < 0``) is **dropped at commit** — the table row is fetched and
-written back unchanged, never corrupted.  No replay, no out-of-bounds
-commit: poisoned indices clamp to row 0 and contribute zero.
+(``idx < 0``) is **dropped at commit** — the destination row is never
+touched.  No replay, no out-of-bounds commit: poisoned indices clamp to
+row 0 for the speculative fetch and contribute zero.
 
-Implementation: sequential grid over requests, destination row selected by a
-scalar-prefetched index map; the output aliases the input table so each step
-read-modify-writes one ``(1, block_d)`` tile.  Same-row runs stay resident
-in VMEM (Pallas only flushes on block-index change), which makes
-expert-contiguous MoE combines cheap.
+Implementation: grid ``(d // block_d, n // block_n)`` with the request dim
+fast; each step handles a *block* of ``block_n`` destination-sorted
+requests.  The table (aliased as the output) stays un-blocked in ``ANY``
+memory space; per request the kernel DMAs the destination row-slice into a
+VMEM row buffer, accumulates the (poison-masked) contribution, and DMAs it
+back — the scalar-prefetched index drives the row selection, and the
+read-modify-write chain through VMEM keeps same-row runs of the sorted
+requests coherent.  ``n`` not divisible by ``block_n`` pads the request
+vector with poison (contributes nothing, by construction).
 """
 from __future__ import annotations
 
@@ -21,52 +25,73 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _kernel(idx_ref, vals_ref, table_ref, out_ref):
-    i = pl.program_id(1)  # request index — the FAST grid dim, so same-row
-    #                       runs of sorted requests share a resident block
-    poison = idx_ref[i] < 0
-    contrib = jnp.where(poison, jnp.zeros_like(vals_ref[...]), vals_ref[...])
-    row = jnp.maximum(idx_ref[i], 0)
-    prev_row = jnp.maximum(idx_ref[jnp.maximum(i - 1, 0)], 0)
-    run_start = (i == 0) | (prev_row != row)
-    # run start: seed from the table; within a run: accumulate in-place on
-    # the resident out block (Pallas flushes only on block-index change)
-    base = jnp.where(run_start, table_ref[...], out_ref[...])
-    out_ref[...] = base + contrib
+from .backend import default_interpret
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def _kernel(idx_ref, vals_ref, table_ref, out_ref, rowbuf, sem, *,
+            block_n, block_d):
+    j = pl.program_id(0)
+    nb = pl.program_id(1)
+    base = nb * block_n
+    for r in range(block_n):
+        raw = idx_ref[base + r]
+        row = jnp.maximum(raw, 0)
+        poison = raw < 0
+        rd = pltpu.make_async_copy(
+            out_ref.at[row, pl.ds(j * block_d, block_d)], rowbuf, sem)
+        rd.start()
+        rd.wait()
+        contrib = jnp.where(poison, jnp.zeros_like(vals_ref[r]), vals_ref[r])
+        rowbuf[...] = rowbuf[...] + contrib
+        wr = pltpu.make_async_copy(
+            rowbuf, out_ref.at[row, pl.ds(j * block_d, block_d)], sem)
+        wr.start()
+        wr.wait()
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_d", "block_n", "interpret"))
 def spec_scatter_add(table: jax.Array, idx: jax.Array, values: jax.Array, *,
-                     block_d: int = 512, interpret: bool = True) -> jax.Array:
+                     block_d: int = 512, block_n: int = 8,
+                     interpret: bool | None = None) -> jax.Array:
     """Return table with ``values`` added at ``idx`` (poisoned rows dropped).
 
     Requests are destination-sorted inside the wrapper (MoE combines arrive
     expert-contiguous already — the AGU's topological-order discipline,
     §5.1.3 — making the sort a no-op there).
     """
+    if interpret is None:
+        interpret = default_interpret()
     n = idx.shape[0]
     v, d = table.shape
     bd = min(block_d, d)
+    bn = min(block_n, n)
     assert d % bd == 0
 
     order = jnp.argsort(idx)
     idx = idx[order]
     values = values[order]
 
+    pad = (-n) % bn
+    if pad:
+        idx = jnp.concatenate([idx, jnp.full((pad,), -1, idx.dtype)])
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad, d), values.dtype)])
+    np_ = n + pad
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(d // bd, n),
+        grid=(d // bd, np_ // bn),
         in_specs=[
-            pl.BlockSpec((1, bd), lambda j, i, idx_ref: (i, j)),       # values
-            pl.BlockSpec((1, bd),
-                         lambda j, i, idx_ref: (jnp.maximum(idx_ref[i], 0), j)),
+            pl.BlockSpec((bn, bd), lambda j, i, idx_ref: (i, j)),  # values
+            pl.BlockSpec(memory_space=pltpu.ANY),                  # table
         ],
-        out_specs=pl.BlockSpec(
-            (1, bd), lambda j, i, idx_ref: (jnp.maximum(idx_ref[i], 0), j)),
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[pltpu.VMEM((bd,), table.dtype),
+                        pltpu.SemaphoreType.DMA(())],
     )
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, block_n=bn, block_d=bd),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((v, d), table.dtype),
         input_output_aliases={2: 0},  # table aliases the output (index

@@ -37,6 +37,9 @@ _COLL_RE = re.compile(
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
     r"[.\w]*\(")
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# one dot operand: optional inline type ("f32[64,128]{1,0} ") + %ref
+_OPND_RE = re.compile(
+    r"((?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+)?(%[\w.\-]+)")
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -111,8 +114,18 @@ class HloCost:
             res_elems = 1
             for d in res_dims:
                 res_elems *= d
-            ops = [o.strip() for o in operands.split(",")]
-            lhs_ty = sym.get(ops[0], "") if ops else ""
+            # operands can't be comma-split (shapes contain commas):
+            # newer XLA prints inline-typed operands
+            # ("f32[256,256]{1,0} %Arg_0.1"); older prints bare refs
+            # ("%Arg_0.1") that resolve through the symbol table
+            opnds = [(om.group(1) or "", om.group(2))
+                     for om in _OPND_RE.finditer(operands)]
+
+            def oty(i: int) -> str:
+                ty, ref = opnds[i]
+                return ty if ty else sym.get(ref, "")
+
+            lhs_ty = oty(0) if opnds else ""
             lhs_dims = _dims(lhs_ty)
             k = 1
             if lhs_dims is not None and lhs_cd:
@@ -121,8 +134,8 @@ class HloCost:
                         k *= lhs_dims[int(cd)]
             out["dot_flops"] += 2.0 * res_elems * max(k, 1)
             out["dot_bytes"] += (_type_bytes(res_ty)
-                                 + sum(_type_bytes(sym.get(o, ""))
-                                       for o in ops))
+                                 + sum(_type_bytes(oty(i))
+                                       for i in range(len(opnds))))
         for m in _COLL_RE.finditer(text):
             op = m.group(2)
             out[op] = out.get(op, 0.0) + _type_bytes(m.group(1))

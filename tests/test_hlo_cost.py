@@ -41,8 +41,10 @@ def test_scan_trip_count_multiplied():
     expect = 9 * 2 * 64 * 128 * 128
     assert got["dot_flops"] == pytest.approx(expect, rel=0.01), got
     # the xla cost_analysis undercount that motivates this parser:
-    xla_flops = c.cost_analysis()["flops"]
-    assert xla_flops < expect / 2
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax wraps in a list
+        ca = ca[0]
+    assert ca["flops"] < expect / 2
 
 
 def test_nested_scan():

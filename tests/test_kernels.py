@@ -1,10 +1,20 @@
 """Pallas kernels (interpret mode) vs pure-jnp oracles — shape/dtype sweeps
-plus hypothesis property tests on the poison semantics."""
+plus property tests on the poison semantics (hypothesis when available,
+a seeded-random fallback loop otherwise)."""
+import random
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_FALLBACK_SEEDS = sorted(random.Random(0xDAE).sample(range(10_000), 15))
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
@@ -56,9 +66,7 @@ def test_spec_scatter_sweep(v, d, n):
                                atol=1e-4)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.integers(0, 10_000))
-def test_spec_scatter_poison_never_commits(seed):
+def _check_scatter_poison_never_commits(seed):
     """Paper §3.1: mis-speculated stores are never committed — rows only
     referenced by poisoned requests are bit-identical afterwards."""
     r = np.random.default_rng(seed)
@@ -75,6 +83,17 @@ def test_spec_scatter_poison_never_commits(seed):
         if row not in touched:
             np.testing.assert_array_equal(np.asarray(out[row]),
                                           np.asarray(table[row]))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_spec_scatter_poison_never_commits(seed):
+        _check_scatter_poison_never_commits(seed)
+else:
+    @pytest.mark.parametrize("seed", _FALLBACK_SEEDS)
+    def test_spec_scatter_poison_never_commits(seed):
+        _check_scatter_poison_never_commits(seed)
 
 
 # ---------------------------------------------------------------------------

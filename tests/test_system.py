@@ -67,8 +67,8 @@ def test_dryrun_cell_small_mesh(tmp_path):
     from repro.launch.hlo_cost import analyze_hlo
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import auto_axis_types
+    mesh = jax.make_mesh((2, 2), ("data", "model"), **auto_axis_types(2))
     cfg = smoke(get("phi4_mini_3_8b"))
     model = build_model(cfg)
     from repro.train.train_step import make_train_step
