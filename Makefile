@@ -1,18 +1,36 @@
-# Repo-wide targets. The tier-1 gate is `make check`; `make bench-quick`
-# is the <60 s perf smoke (reduced DAE matrix, no jax sections) and
-# `make bench` the full harness with a machine-readable JSON drop.
+# Repo-wide targets, mirroring the three CI tiers (see .github/workflows/
+# ci.yml and README.md):
+#   make lint        — ruff over src/tests/benchmarks (CI tier: lint)
+#   make check       — full tier-1 pytest gate (~4 min on 2 vCPUs)
+#   make bench-quick — <60 s perf smoke; refreshes BENCH_quick.json
+#   make bench-gate  — quick run into BENCH_gate.json, diffed against the
+#                      BENCH_quick.json baseline committed at HEAD (via
+#                      `git show`, so a refreshed working copy can't gate
+#                      against itself; fails on >25% slowdown, tune with
+#                      TOLERANCE=0.6 on noisy boxes)
+#   make bench       — full harness, refreshes BENCH_machine.json
 
 PY        ?= python
+TOLERANCE ?= 0.25
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: check bench-quick bench test
+.PHONY: check bench-quick bench bench-gate lint test
 
 check test:
 	$(PY) -m pytest -x -q
 
+lint:
+	$(PY) -m ruff check .
+
 bench-quick:
 	$(PY) -m benchmarks.run --quick --json BENCH_quick.json
+
+bench-gate:
+	$(PY) -m benchmarks.run --quick --json BENCH_gate.json
+	git show HEAD:BENCH_quick.json > BENCH_gate_baseline.json
+	$(PY) -m benchmarks.compare BENCH_gate.json \
+		--baseline BENCH_gate_baseline.json --tolerance $(TOLERANCE)
 
 bench:
 	$(PY) -m benchmarks.run --json BENCH_machine.json

@@ -1,0 +1,98 @@
+"""Perf regression gate: diff a fresh ``run.py --json`` drop against a
+committed baseline.
+
+Usage::
+
+    python -m benchmarks.compare NEW.json [--baseline BENCH_machine.json]
+                                 [--tolerance 0.25]
+
+Rows are matched by ``name`` and compared on ``us_per_call``; a section
+slower than ``baseline * (1 + tolerance)`` is a regression and the exit
+status is non-zero.  Sections present in only one file are reported but do
+not fail the gate (the quick and full matrices intentionally differ);
+an empty intersection fails, because then the gate checked nothing.
+The default tolerance (25%) suits a quiet dedicated box; CI on shared
+runners passes a looser value explicitly.  Faster-than-baseline rows are
+listed as improvements so a stale baseline is visible too.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Tuple
+
+
+def load_rows(path: str) -> Dict[str, float]:
+    with open(path) as fh:
+        data = json.load(fh)
+    if not isinstance(data, list):
+        raise SystemExit(f"{path}: expected a JSON list of benchmark rows")
+    out: Dict[str, float] = {}
+    for row in data:
+        try:
+            out[row["name"]] = float(row["us_per_call"])
+        except (TypeError, KeyError, ValueError):
+            raise SystemExit(
+                f"{path}: malformed row {row!r} "
+                f"(need name + numeric us_per_call)") from None
+    return out
+
+
+def compare(new: Dict[str, float], base: Dict[str, float],
+            tolerance: float) -> Tuple[List[str], List[str]]:
+    """Returns (report_lines, regression_names)."""
+    lines: List[str] = []
+    regressions: List[str] = []
+    shared = sorted(set(new) & set(base))
+    if not shared:
+        raise SystemExit("no common benchmark sections between the two "
+                         "files — nothing was gated")
+    width = max(len(n) for n in shared)
+    for name in shared:
+        b, n = base[name], new[name]
+        ratio = n / b if b else float("inf")
+        status = "ok"
+        if ratio > 1.0 + tolerance:
+            status = "REGRESSION"
+            regressions.append(name)
+        elif ratio < 1.0 - tolerance:
+            status = "improved"
+        lines.append(f"  {name:<{width}s}  {b / 1e3:10.1f} ms -> "
+                     f"{n / 1e3:10.1f} ms  ({ratio:5.2f}x)  {status}")
+    for name in sorted(set(base) - set(new)):
+        lines.append(f"  {name:<{width}s}  missing from new run (skipped)")
+    for name in sorted(set(new) - set(base)):
+        lines.append(f"  {name:<{width}s}  new section (no baseline)")
+    return lines, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="fresh run.py --json output")
+    ap.add_argument("--baseline", default="BENCH_machine.json",
+                    help="committed baseline JSON (default: "
+                         "BENCH_machine.json)")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed slowdown fraction before failing "
+                         "(default: 0.25 = 25%%)")
+    args = ap.parse_args(argv)
+    if args.tolerance < 0:
+        raise SystemExit("--tolerance must be >= 0")
+
+    new = load_rows(args.new)
+    base = load_rows(args.baseline)
+    lines, regressions = compare(new, base, args.tolerance)
+    print(f"bench gate: {args.new} vs {args.baseline} "
+          f"(tolerance {args.tolerance:.0%})")
+    for ln in lines:
+        print(ln)
+    if regressions:
+        print(f"FAIL: {len(regressions)} section(s) regressed "
+              f">{args.tolerance:.0%}: {', '.join(regressions)}")
+        return 1
+    print("PASS: no section regressed beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -23,7 +23,13 @@ from repro.core.machine import MachineConfig
 
 def _resolve_jobs(jobs: Optional[int], n_tasks: int) -> int:
     if jobs is None:
-        jobs = int(os.environ.get("DAE_BENCH_JOBS", "0"))
+        raw = os.environ.get("DAE_BENCH_JOBS", "0").strip() or "0"
+        try:
+            jobs = int(raw)
+        except ValueError:
+            raise SystemExit(
+                f"DAE_BENCH_JOBS must be an integer "
+                f"(0 = one worker per core), got {raw!r}") from None
     if jobs <= 0:
         jobs = os.cpu_count() or 1
     return max(1, min(jobs, n_tasks))
@@ -91,6 +97,8 @@ def run_one(name: str, cfg: MachineConfig = None) -> Dict:
         "size_spec": code_size(comp.agu) + code_size(comp.cu),
         "spec_requests": comp.spec.spec_requests,
         "fallbacks": len(comp.spec.fallback),
+        # batch-window diagnostics (0.0 unless DAE_SIM_WINDOW / cfg opts in)
+        "window_hit": round(spec.result.window_hit_rate, 3),
     }
     return row
 
@@ -112,9 +120,9 @@ def main(out_json: str = None, jobs: Optional[int] = None,
               f"{r['oracle']:8d} {r['speedup_spec_vs_sta']:8.2f}x "
               f"{r['spec_vs_oracle']:9.3f} {100*r['misspec_rate']:5.1f}% "
               f"{r['poison_blocks']:3d} {r['poison_calls']:3d}")
-    import math
-    hm = lambda xs: len(xs) / sum(1.0 / x for x in xs)
-    sta = [r["sta"] for r in rows]
+    def hm(xs):
+        return len(xs) / sum(1.0 / x for x in xs)
+
     print(f"\nharmonic-mean speedups vs STA:  "
           f"DAE={hm([r['sta']/r['dae'] for r in rows]):.2f}x  "
           f"SPEC={hm([r['sta']/r['spec'] for r in rows]):.2f}x  "

@@ -8,7 +8,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get, smoke
 from repro.models import moe

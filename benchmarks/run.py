@@ -7,12 +7,19 @@ convention); `derived` carries the headline metric of each section.
 ``BENCH_machine.json``) so the perf trajectory is machine-readable across
 PRs.  ``--quick`` runs a reduced matrix (small kernels, shallow nesting,
 coarse rate sweep, no jax sections) that finishes in well under a minute —
-wired into ``make bench-quick``.
+wired into ``make bench-quick``.  ``benchmarks/compare.py`` diffs two such
+JSON drops and is the CI bench-gate.
+
+The DAE sections run with batch-window execution enabled (the simulator's
+quiescent-stretch fast path — see ``repro.core.machine``); pass
+``--no-window`` for the plain event-stepped engine.  The ``dae_quiescent``
+section always measures both modes against each other.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 
@@ -33,7 +40,25 @@ def main(argv=None) -> None:
                     help="worker processes for the DAE sections "
                          "(default: DAE_BENCH_JOBS or one per core; "
                          "1 = sequential)")
+    ap.add_argument("--no-window", dest="window", action="store_false",
+                    help="run the DAE sections on the plain event-stepped "
+                         "engine instead of batch-window execution")
     args = ap.parse_args(argv)
+    # propagate the window opt-in to fork-pool workers via the env knob,
+    # restoring the caller's value on exit (in-process callers like the
+    # harness tests must not see their environment silently rewritten)
+    prev_window = os.environ.get("DAE_SIM_WINDOW")
+    os.environ["DAE_SIM_WINDOW"] = "1" if args.window else "0"
+    try:
+        _run_sections(args)
+    finally:
+        if prev_window is None:
+            os.environ.pop("DAE_SIM_WINDOW", None)
+        else:
+            os.environ["DAE_SIM_WINDOW"] = prev_window
+
+
+def _run_sections(args) -> None:
     quick = args.quick
     if args.json_out:  # fail fast on an unwritable path, not after the
         # run — append mode probes without clobbering the previous artifact
@@ -51,9 +76,14 @@ def main(argv=None) -> None:
     t1, us1 = _timed(lambda: dae_table1.main(
         jobs=jobs,
         benches=dae_table1.QUICK_BENCHES if quick else None))
-    hm = lambda xs: len(xs) / sum(1.0 / x for x in xs)
+
+    def hm(xs):
+        return len(xs) / sum(1.0 / x for x in xs)
+
     spec_hm = hm([r["sta"] / r["spec"] for r in t1])
-    rows.append(("dae_table1", us1, f"spec_hm_speedup={spec_hm:.2f}x"))
+    win_hit = sum(r["window_hit"] for r in t1) / len(t1)
+    rows.append(("dae_table1", us1,
+                 f"spec_hm_speedup={spec_hm:.2f}x,win_hit={win_hit:.3f}"))
 
     print()
     print("=" * 72)
@@ -74,6 +104,16 @@ def main(argv=None) -> None:
         jobs=jobs, max_levels=4 if quick else 8))
     ok = all(pc == expc for (_, _, pc, expc, _, _) in f7)
     rows.append(("dae_fig7", us7, f"poison_call_formula_holds={ok}"))
+
+    print()
+    print("=" * 72)
+    print("Quiescent-heavy sim A/B — batch-window vs event-stepped engine")
+    print("=" * 72)
+    from benchmarks import dae_quiescent
+    qr, usq = _timed(lambda: dae_quiescent.main(
+        points=dae_quiescent.QUICK_POINTS if quick else None))
+    rows.append(("dae_quiescent", usq,
+                 f"win_speedup={qr['speedup']:.2f}x,win_hit={qr['hit']:.3f}"))
 
     if not quick:
         # the paper's technique inside the LM framework: MoE dispatch A/B

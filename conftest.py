@@ -1,0 +1,11 @@
+"""Repo-root pytest configuration.
+
+``benchmarks/`` is a plain directory package at the repo root; tests that
+exercise the harness (and the quiescent-workload builder) import it.
+``python -m pytest`` puts the cwd on sys.path, a bare ``pytest`` does not
+— pin the repo root explicitly so both invocations work.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -13,9 +13,9 @@ fire-and-forget (Fig. 1c).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Set, Tuple
+from typing import Dict, Set, Tuple
 
-from .ir import Block, Function, Instr
+from .ir import Function, Instr
 from .lod import tag_mids
 
 

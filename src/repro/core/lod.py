@@ -18,7 +18,7 @@ slices produced later can be correlated with this analysis.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, Set, Tuple
 
 from .cfg import CFGInfo
 from .ir import Function, Instr, MEMORY_OPS

@@ -30,6 +30,20 @@ implementation (kept as the golden oracle in
 ``tests/ref_machine_cyclestep.py`` and asserted against in
 ``tests/test_sim_equivalence.py``).
 
+On top of the event scheduler sits opt-in **batch-window execution**
+(``MachineConfig(batch_window=True)``, or ``DAE_SIM_WINDOW=1`` machine
+wide): when the wakeup scan shows that a single slice process is the only
+unit able to make progress before cycle T — no FIFO edge, no LSQ
+retirement, no poison event can fire in between — the machine grants it
+the window ``[now, T)`` and the process advances through the whole
+stretch in one step instead of one event per cycle, clamping the window
+whenever one of its own FIFO edges wakes the LSQ early.  Windowed runs
+are bit-identical to both the event-stepped and the cycle-stepped models
+(same equivalence suite); ``MachineResult.window_grants`` /
+``window_cycles`` / ``window_hit_rate`` report how often the fast path
+fired, and ``benchmarks/dae_quiescent.py`` measures the wall-time win on
+quiescent-heavy workloads.
+
 Invariants the event wiring preserves (and that any new unit must also
 honour — see :mod:`repro.core.sim.events` for why):
 

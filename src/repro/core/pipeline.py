@@ -13,7 +13,7 @@ Mirrors the paper's §8.1.1 baselines:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, Optional, Set, Tuple
 
 import numpy as np
@@ -24,7 +24,7 @@ from . import machine
 from . import poison as poison_mod
 from . import speculation as spec_mod
 from .cfg import CFGInfo
-from .interp import Trace, run as interp_run
+from .interp import run as interp_run
 from .ir import Function
 
 

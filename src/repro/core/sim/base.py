@@ -5,8 +5,15 @@ the event-driven engine (``events``/``fifo``/``units``) builds on them.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Tuple
+
+
+def _env_batch_window() -> bool:
+    """Opt-in default for batch-window execution (``DAE_SIM_WINDOW=1``)."""
+    return os.environ.get("DAE_SIM_WINDOW", "").strip().lower() in (
+        "1", "true", "yes", "on")
 
 
 @dataclass
@@ -19,6 +26,12 @@ class MachineConfig:
     width: int = 4             # per-slice instructions retired per cycle
     sta_width: int = 8         # STA issue width (spatial datapath ILP)
     max_cycles: int = 20_000_000
+    # batch-window execution: when every other unit is provably quiet until
+    # cycle T, the sole runnable slice process advances through [now, T) in
+    # one step instead of one event per cycle.  Bit-identical to the
+    # event-stepped and cycle-stepped models (tests/test_sim_equivalence.py);
+    # opt in per-config or machine-wide via DAE_SIM_WINDOW=1.
+    batch_window: bool = field(default_factory=_env_batch_window)
 
 
 @dataclass
@@ -30,11 +43,21 @@ class MachineResult:
     sync_waits: int = 0
     store_trace: Dict[str, List[Tuple[int, Any]]] = field(default_factory=dict)
     lsq_high_water: int = 0
+    # batch-window statistics (diagnostic only — never part of the
+    # bit-exactness contract): how many windows were granted and how many
+    # simulated cycles were consumed inside them.
+    window_grants: int = 0
+    window_cycles: int = 0
 
     @property
     def misspec_rate(self) -> float:
         tot = self.stores_committed + self.stores_poisoned
         return self.stores_poisoned / tot if tot else 0.0
+
+    @property
+    def window_hit_rate(self) -> float:
+        """Fraction of simulated cycles executed inside batch windows."""
+        return self.window_cycles / self.cycles if self.cycles else 0.0
 
 
 class Deadlock(RuntimeError):

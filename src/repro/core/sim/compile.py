@@ -14,7 +14,18 @@ exact yield discipline of the interpreted path:
   free, and a predicated-off ``poison_st`` refunds its slot);
 * a blocked FIFO op sets ``self.park``/``self.blocked_on`` before each
   blocked-cycle yield and re-checks its condition on resume, so the
-  event-driven machine can skip the blocked cycles wholesale.
+  event-driven machine can skip the blocked cycles wholesale;
+* **batch windows** — the generator mirrors the machine clock in a local
+  ``_clk`` (synced with ``self._now`` around every yield).  When the
+  machine grants a window (``self.window_end > _clk + 1``: every other
+  unit provably quiet until then, see :mod:`repro.core.sim.events`), a
+  cycle that would otherwise be a bare yield is consumed locally —
+  ``_clk += 1`` — and a whole budget-overflow run of private ops advances
+  in one arithmetic step.  A parked pop may jump ``_clk`` straight to the
+  head's arrival cycle if it lands inside the window.  Every FIFO
+  push/pop clamps the local window end to the woken LSQ's new ``wake``,
+  which is what keeps the quiescence premise true for the rest of the
+  window; cycle counts and all architectural effects stay bit-identical.
 
 Cycle counts and architectural side effects are bit-identical to the
 interpreted generator (and therefore to the cycle-stepped reference model);
@@ -24,7 +35,7 @@ generator (``compile_slice`` returns None).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from ..ir import Function
 
@@ -172,6 +183,10 @@ def _compile_slice(fn: Function):
     emit("    _Wm1 = W - 1")
     emit("    def run():")
     emit("        budget = W")
+    # local mirrors of the machine clock and the granted window end; kept
+    # in sync with self._now / self.window_end around every yield
+    emit("        _clk = self._now")
+    emit("        _wend = self.window_end")
 
     # collect all names referenced anywhere so locals always exist
     all_names = set()
@@ -234,7 +249,18 @@ def _compile_slice(fn: Function):
         # checks batch into one adjustment + yield loop after the run —
         # same cycle count, same budget value at every FIFO op (the only
         # externally observable points).  FIFO ops keep the per-op check.
+        # Inside a granted window the whole overflow is consumed as one
+        # ``_clk`` advance; the yield loop re-reads the window after every
+        # machine round trip so a grant that lands mid-run still batches
+        # the remaining cycles.
         pending_cost = 0
+
+        def yield_sync(ind):
+            """One machine round trip with the _clk/_wend sync protocol."""
+            body.append(f"{ind}self._now = _clk")
+            body.append(f"{ind}yield")
+            body.append(f"{ind}_clk = self._now")
+            body.append(f"{ind}_wend = self.window_end")
 
         def flush_budget(ind=ind):
             nonlocal pending_cost
@@ -244,8 +270,25 @@ def _compile_slice(fn: Function):
             body.append(f"{ind}if budget < 0:")
             body.append(f"{ind}    _ny = (-budget + _Wm1) // W")
             body.append(f"{ind}    budget += _ny * W")
-            body.append(f"{ind}    for _q in range(_ny):")
-            body.append(f"{ind}        yield")
+            body.append(f"{ind}    _adv = _wend - 1 - _clk")
+            body.append(f"{ind}    if _adv > 0:")
+            body.append(f"{ind}        if _adv >= _ny:")
+            body.append(f"{ind}            _clk += _ny")
+            body.append(f"{ind}            _ny = 0")
+            body.append(f"{ind}        else:")
+            body.append(f"{ind}            _clk += _adv")
+            body.append(f"{ind}            _ny -= _adv")
+            body.append(f"{ind}    while _ny:")
+            yield_sync(f"{ind}        ")
+            body.append(f"{ind}        _ny -= 1")
+            body.append(f"{ind}        _adv = _wend - 1 - _clk")
+            body.append(f"{ind}        if _adv > 0 and _ny:")
+            body.append(f"{ind}            if _adv >= _ny:")
+            body.append(f"{ind}                _clk += _ny")
+            body.append(f"{ind}                _ny = 0")
+            body.append(f"{ind}            else:")
+            body.append(f"{ind}                _clk += _adv")
+            body.append(f"{ind}                _ny -= _adv")
             pending_cost = 0
 
         for instr in blk.body:
@@ -256,7 +299,10 @@ def _compile_slice(fn: Function):
             else:
                 flush_budget()
                 body.append(f"{ind}if budget < 1:")
-                body.append(f"{ind}    yield")
+                body.append(f"{ind}    if _clk + 1 < _wend:")
+                body.append(f"{ind}        _clk += 1")
+                body.append(f"{ind}    else:")
+                yield_sync(f"{ind}        ")
                 body.append(f"{ind}    budget = W")
                 body.append(f"{ind}budget -= 1")
             if op == "const":
@@ -298,28 +344,37 @@ def _compile_slice(fn: Function):
                             f"'send_ld {instr.array}'")
                 body.append(f"{ind}while len(_reqq_{s}) >= _reqcap_{s}:")
                 body.append(f"{ind}    self.park = _pkpushreq_{s}")
-                body.append(f"{ind}    yield")
+                yield_sync(f"{ind}    ")
                 body.append(f"{ind}    budget = W")
                 body.append(f"{ind}self.park = None")
-                body.append(f"{ind}_t = self._now + _reqlat_{s}")
+                body.append(f"{ind}_t = _clk + _reqlat_{s}")
                 body.append(f"{ind}_reqq_{s}.append((_t, "
                             f"('ld', int({val(instr.args[0])}), {sync!r})))")
                 body.append(f"{ind}if _t < _lsq_{s}.wake: "
                             f"_lsq_{s}.wake = _t")
+                body.append(f"{ind}if _lsq_{s}.wake < _wend: "
+                            f"_wend = _lsq_{s}.wake")
                 if sync:
                     body.append(f"{ind}self.res.sync_waits += 1")
                     body.append(f"{ind}self.blocked_on = "
                                 f"'sync_resp {instr.array}'")
                     body.append(f"{ind}while not (_respq_{s} and "
-                                f"_respq_{s}[0][0] <= self._now):")
+                                f"_respq_{s}[0][0] <= _clk):")
+                    body.append(f"{ind}    if _respq_{s} and "
+                                f"_respq_{s}[0][0] < _wend:")
+                    body.append(f"{ind}        _clk = _respq_{s}[0][0]")
+                    body.append(f"{ind}        budget = W")
+                    body.append(f"{ind}        continue")
                     body.append(f"{ind}    self.park = _pkpopresp_{s}")
-                    body.append(f"{ind}    yield")
+                    yield_sync(f"{ind}    ")
                     body.append(f"{ind}    budget = W")
                     body.append(f"{ind}self.park = None")
                     body.append(f"{ind}{sym(instr.dest)} = "
                                 f"_respq_{s}.popleft()[1]")
-                    body.append(f"{ind}if self._now < _lsq_{s}.wake: "
-                                f"_lsq_{s}.wake = self._now")
+                    body.append(f"{ind}if _clk < _lsq_{s}.wake: "
+                                f"_lsq_{s}.wake = _clk")
+                    body.append(f"{ind}if _lsq_{s}.wake < _wend: "
+                                f"_wend = _lsq_{s}.wake")
                 body.append(f"{ind}self.blocked_on = ''")
             elif op == "send_st":
                 s = sym(instr.array)
@@ -327,29 +382,38 @@ def _compile_slice(fn: Function):
                             f"'send_st {instr.array}'")
                 body.append(f"{ind}while len(_reqq_{s}) >= _reqcap_{s}:")
                 body.append(f"{ind}    self.park = _pkpushreq_{s}")
-                body.append(f"{ind}    yield")
+                yield_sync(f"{ind}    ")
                 body.append(f"{ind}    budget = W")
                 body.append(f"{ind}self.park = None")
-                body.append(f"{ind}_t = self._now + _reqlat_{s}")
+                body.append(f"{ind}_t = _clk + _reqlat_{s}")
                 body.append(f"{ind}_reqq_{s}.append((_t, "
                             f"('st', int({val(instr.args[0])}), False)))")
                 body.append(f"{ind}if _t < _lsq_{s}.wake: "
                             f"_lsq_{s}.wake = _t")
+                body.append(f"{ind}if _lsq_{s}.wake < _wend: "
+                            f"_wend = _lsq_{s}.wake")
                 body.append(f"{ind}self.blocked_on = ''")
             elif op == "consume_ld":
                 s = sym(instr.array)
                 body.append(f"{ind}self.blocked_on = "
                             f"'consume_ld {instr.array}'")
                 body.append(f"{ind}while not (_ldvq_{s} and "
-                            f"_ldvq_{s}[0][0] <= self._now):")
+                            f"_ldvq_{s}[0][0] <= _clk):")
+                body.append(f"{ind}    if _ldvq_{s} and "
+                            f"_ldvq_{s}[0][0] < _wend:")
+                body.append(f"{ind}        _clk = _ldvq_{s}[0][0]")
+                body.append(f"{ind}        budget = W")
+                body.append(f"{ind}        continue")
                 body.append(f"{ind}    self.park = _pkpopldv_{s}")
-                body.append(f"{ind}    yield")
+                yield_sync(f"{ind}    ")
                 body.append(f"{ind}    budget = W")
                 body.append(f"{ind}self.park = None")
                 body.append(f"{ind}{sym(instr.dest)} = "
                             f"_ldvq_{s}.popleft()[1]")
-                body.append(f"{ind}if self._now < _lsq_{s}.wake: "
-                            f"_lsq_{s}.wake = self._now")
+                body.append(f"{ind}if _clk < _lsq_{s}.wake: "
+                            f"_lsq_{s}.wake = _clk")
+                body.append(f"{ind}if _lsq_{s}.wake < _wend: "
+                            f"_wend = _lsq_{s}.wake")
                 body.append(f"{ind}self.blocked_on = ''")
             elif op in ("produce_st", "poison_st"):
                 s = sym(instr.array)
@@ -369,13 +433,15 @@ def _compile_slice(fn: Function):
                             f"'{op} {instr.array}'")
                 body.append(f"{ind}while len(_stvq_{s}) >= _stvcap_{s}:")
                 body.append(f"{ind}    self.park = _pkpushstv_{s}")
-                body.append(f"{ind}    yield")
+                yield_sync(f"{ind}    ")
                 body.append(f"{ind}    budget = W")
                 body.append(f"{ind}self.park = None")
-                body.append(f"{ind}_t = self._now + _stvlat_{s}")
+                body.append(f"{ind}_t = _clk + _stvlat_{s}")
                 body.append(f"{ind}_stvq_{s}.append((_t, {tok}))")
                 body.append(f"{ind}if _t < _lsq_{s}.wake: "
                             f"_lsq_{s}.wake = _t")
+                body.append(f"{ind}if _lsq_{s}.wake < _wend: "
+                            f"_wend = _lsq_{s}.wake")
                 body.append(f"{ind}self.blocked_on = ''")
                 ind = "                "
             elif op == "print":
@@ -386,6 +452,7 @@ def _compile_slice(fn: Function):
         if term.kind == "ret":
             for a in local_arrays:  # flush list mirrors back to numpy
                 body.append(f"{ind}self.local[{a!r}][:] = _loc_{sym(a)}")
+            body.append(f"{ind}self._now = _clk")
             body.append(f"{ind}self.done = True")
             body.append(f"{ind}return")
         else:
@@ -397,7 +464,13 @@ def _compile_slice(fn: Function):
                 body.append(f"{ind}_blk = {blk_id[term.targets[0]]} "
                             f"if {sym(term.cond)} else "
                             f"{blk_id[term.targets[1]]}")
-            body.append(f"{ind}yield  # block boundary")
+            body.append(f"{ind}if _clk + 1 < _wend:")
+            body.append(f"{ind}    _clk += 1  # block boundary in-window")
+            body.append(f"{ind}else:")
+            body.append(f"{ind}    self._now = _clk")
+            body.append(f"{ind}    yield  # block boundary")
+            body.append(f"{ind}    _clk = self._now")
+            body.append(f"{ind}    _wend = self.window_end")
             body.append(f"{ind}budget = W")
         if not body:
             body.append(f"{ind}pass")

@@ -25,10 +25,41 @@ rarely more than four in the paper's workloads), so ``next_cycle`` is a
 linear min-scan over the registered units: cheaper than heap maintenance
 at these sizes, with the same scheduler interface.  Hot paths (the FIFO
 edges) update ``unit.wake`` directly — the inlined form of ``schedule``.
+
+Batch windows (the quiescent-stretch theorem)
+---------------------------------------------
+``next_two`` exposes the earliest and second-earliest pending wakeups.
+When the earliest belongs to a single slice process P and every other
+unit's wake is ≥ T (the second-earliest), the machine may grant P the
+half-open **window** [now, T) and let it advance through all of those
+cycles in one step.  This discharges the proof obligations the per-cycle
+interleaving normally carries:
+
+* *No missed wakeup of another unit* — a unit's ``wake`` is a sound lower
+  bound on the next cycle it can make progress **absent external
+  mutation** (that is the missed-wakeup invariant above: every mutation
+  that could unblock it lowers ``wake``).  Since only P runs inside the
+  window, no FIFO edge, LSQ retirement, or poison event can fire before T
+  unless P itself causes it.
+* *P's own mutations* — private ops (compute, slice-local memory,
+  registers) touch no shared state; every FIFO push/pop P performs lowers
+  exactly one other unit's ``wake`` monotonically, and P must immediately
+  **clamp its window end to that new wake**, restoring the premise for
+  the remaining cycles.  A pop edge lowers the LSQ's wake to the current
+  cycle (the DU phase runs after the slice phases), which closes the
+  window at that cycle — the machine then runs the DU phase of the same
+  cycle in the usual order.
+* *Phase order* — the grant requires every other unit's wake ≥ T, so no
+  AGU→CU→DU ordering within [now, T) is observable: the reference model
+  would run those phases as no-ops.
+
+A window is therefore *permission*, not obligation: a process that
+ignores ``window_end`` (e.g. the interpreted fallback mid-park) simply
+yields every cycle, which is the reference behaviour.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 INF = float("inf")
 
@@ -57,3 +88,24 @@ class EventQueue:
             if uw < w:
                 w = uw
         return None if w is INF else w
+
+    def next_two(self) -> Tuple[float, Optional[object], float]:
+        """``(earliest, its unit, second-earliest)`` over registered units.
+
+        The spec (and test hook) for the machine loop's inlined scan: the
+        returned unit is a candidate for a batch-window grant when it is a
+        slice process and ``second > earliest + 1`` (see the module
+        docstring).  Ties yield ``second == earliest``, which correctly
+        forbids a grant.  ``earliest`` is ``INF`` when nothing is pending.
+        """
+        w1 = w2 = INF
+        u1: Optional[object] = None
+        for u in self.units:
+            uw = u.wake
+            if uw < w1:
+                w2 = w1
+                w1 = uw
+                u1 = u
+            elif uw < w2:
+                w2 = uw
+        return w1, u1, w2

@@ -16,6 +16,16 @@ whoever a state change might unblock (the inlined fast path of
   after the slice phases and can use the freed slot the same cycle.
 
 Timestamps ride with the items: the queue holds ``(arrival_cycle, item)``.
+
+FIFO edges are also what bound **batch windows**: a slice process granted
+a quiescent window (see :mod:`repro.core.sim.events`) may consume cycles
+on its own only while no other unit can run, so after every ``push``/
+``pop`` it must clamp its window end to the woken LSQ's new ``wake`` (a
+pop edge lowers it to the current cycle, closing the window so the DU
+phase of that same cycle runs in the usual order).  The compiled slices
+inline these edges and carry the clamp next to each inlined wake update;
+the interpreted :class:`~repro.core.sim.units.SliceProc` goes through the
+methods below and clamps right after the call.
 """
 from __future__ import annotations
 

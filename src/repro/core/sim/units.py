@@ -317,6 +317,16 @@ class SliceProc:
     process only when a wakeup fires, and the ``while`` re-checks the
     condition (a spurious wakeup just parks again — semantics identical to
     the reference model's per-cycle re-check).
+
+    Batch windows: when the machine grants this process the half-open
+    window ``[self._now, self.window_end)`` (every other unit provably
+    quiet until then — see :mod:`repro.core.sim.events`), the generator may
+    *consume* cycles by advancing ``self._now`` itself instead of yielding,
+    one machine round trip for the whole stretch.  Every FIFO push/pop must
+    then clamp ``window_end`` to the woken LSQ's new ``wake`` so the
+    quiescence premise keeps holding; a window is permission, not
+    obligation — ignoring it (``window_end`` is 0 outside a grant) is
+    exactly the reference behaviour.
     """
 
     def __init__(self, name: str, fn: Function, params: Dict[str, Any],
@@ -336,6 +346,8 @@ class SliceProc:
         self.park: Optional[Tuple[int, Fifo]] = None
         self.wake: float = INF
         self._now = 0
+        # first cycle this process may NOT consume on its own; 0 = no window
+        self.window_end: float = 0
 
     def now(self) -> int:
         return self._now
@@ -376,7 +388,11 @@ class SliceProc:
             for instr in blk.body:
                 cost = 0 if instr.op in ("const", "getreg", "setreg") else 1
                 if budget < cost:
-                    yield step()
+                    if self._now + 1 < self.window_end:
+                        self._now += 1  # consume the cycle inside the window
+                        budget = self.cfg.width
+                    else:
+                        yield step()
                 budget -= cost
                 op = instr.op
                 if op == "const":
@@ -413,14 +429,23 @@ class SliceProc:
                     sync = bool(instr.meta.get("sync"))
                     lsq.req.push(self._now, ("ld", int(_v(env, instr.args[0])),
                                              sync))
+                    if lsq.wake < self.window_end:
+                        self.window_end = lsq.wake  # window clamp
                     if sync:
                         self.res.sync_waits += 1
                         self.blocked_on = f"sync_resp {instr.array}"
                         while not lsq.agu_resp.can_pop(self._now):
+                            q = lsq.agu_resp.q
+                            if q and q[0][0] < self.window_end:
+                                self._now = q[0][0]  # jump to head arrival
+                                budget = self.cfg.width
+                                continue
                             self.park = (PARK_POP, lsq.agu_resp)
                             yield step()
                         self.park = None
                         env[instr.dest] = lsq.agu_resp.pop(self._now)
+                        if lsq.wake < self.window_end:
+                            self.window_end = lsq.wake  # window clamp
                     self.blocked_on = ""
                 elif op == "send_st":
                     lsq = self.lsqs[instr.array]
@@ -431,15 +456,24 @@ class SliceProc:
                     self.park = None
                     lsq.req.push(self._now, ("st", int(_v(env, instr.args[0])),
                                              False))
+                    if lsq.wake < self.window_end:
+                        self.window_end = lsq.wake  # window clamp
                     self.blocked_on = ""
                 elif op == "consume_ld":
                     lsq = self.lsqs[instr.array]
                     self.blocked_on = f"consume_ld {instr.array}"
                     while not lsq.ld_val.can_pop(self._now):
+                        q = lsq.ld_val.q
+                        if q and q[0][0] < self.window_end:
+                            self._now = q[0][0]  # jump to head arrival
+                            budget = self.cfg.width
+                            continue
                         self.park = (PARK_POP, lsq.ld_val)
                         yield step()
                     self.park = None
                     env[instr.dest] = lsq.ld_val.pop(self._now)
+                    if lsq.wake < self.window_end:
+                        self.window_end = lsq.wake  # window clamp
                     self.blocked_on = ""
                 elif op == "produce_st":
                     lsq = self.lsqs[instr.array]
@@ -449,6 +483,8 @@ class SliceProc:
                         yield step()
                     self.park = None
                     lsq.st_val.push(self._now, _v(env, instr.args[0]))
+                    if lsq.wake < self.window_end:
+                        self.window_end = lsq.wake  # window clamp
                     self.blocked_on = ""
                 elif op == "poison_st":
                     pr = instr.meta.get("pred_reg")
@@ -462,6 +498,8 @@ class SliceProc:
                         yield step()
                     self.park = None
                     lsq.st_val.push(self._now, POISON)
+                    if lsq.wake < self.window_end:
+                        self.window_end = lsq.wake  # window clamp
                     self.blocked_on = ""
                 elif op == "print":
                     pass
@@ -478,7 +516,11 @@ class SliceProc:
                 cur = term.targets[0]
             else:
                 cur = term.targets[0 if bool(env[term.cond]) else 1]
-            yield step()  # block boundary
+            if self._now + 1 < self.window_end:
+                self._now += 1  # block boundary consumed inside the window
+                budget = self.cfg.width
+            else:
+                yield step()  # block boundary
 
 
 def _v(env: Dict[str, Any], a: Any) -> Any:
@@ -552,6 +594,8 @@ class Machine:
         cu_gen = cu_p.make_gen()
         agu_p.wake = cu_p.wake = 0
         max_cycles = cfg.max_cycles
+        windowing = cfg.batch_window
+        units = evq.units
 
         now = 0
         while True:
@@ -574,6 +618,11 @@ class Machine:
                         next(agu_gen)
                     except StopIteration:
                         pass
+                    t2 = agu_p._now  # window read-back: cycles it consumed
+                    if t2 > now:
+                        res.window_cycles += t2 - now
+                        now = t2
+                    agu_p.window_end = 0
                     if not agu_p.done:
                         park = agu_p.park
                         if park is None:
@@ -602,6 +651,11 @@ class Machine:
                         next(cu_gen)
                     except StopIteration:
                         pass
+                    t2 = cu_p._now  # window read-back: cycles it consumed
+                    if t2 > now:
+                        res.window_cycles += t2 - now
+                        now = t2
+                    cu_p.window_end = 0
                     if not cu_p.done:
                         park = cu_p.park
                         if park is None:
@@ -638,12 +692,31 @@ class Machine:
                     res.cycles = now
                     return res
 
-            nxt = evq.next_cycle()
-            if nxt is None:
+            # inlined EventQueue.next_two (this is the per-iteration hot
+            # path; the method is the documented spec)
+            w1 = w2 = INF
+            u1 = None
+            for u in units:
+                uw = u.wake
+                if uw < w1:
+                    w2 = w1
+                    w1 = uw
+                    u1 = u
+                elif uw < w2:
+                    w2 = uw
+            if u1 is None:
                 raise Deadlock(self._diag(now))
-            if nxt > max_cycles:
-                raise Deadlock("cycle budget exceeded: " + self._diag(nxt))
-            now = nxt
+            if w1 > max_cycles:
+                raise Deadlock("cycle budget exceeded: " + self._diag(w1))
+            if windowing and (u1 is agu_p or u1 is cu_p):
+                # sole runnable unit before w2 is a slice process: grant it
+                # the window [w1, w2) — capped so a runaway compute loop
+                # still trips the cycle budget above on the next scan
+                end = w2 if w2 <= max_cycles else max_cycles + 1
+                if end > w1 + 1:
+                    u1.window_end = end
+                    res.window_grants += 1
+            now = w1
 
     def _diag(self, now) -> str:
         lines = [f"deadlock at cycle {now}:",

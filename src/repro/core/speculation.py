@@ -18,7 +18,7 @@ FIFO aligned with the AGU's request FIFO.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Set, Tuple
 
 from .cfg import CFGInfo
 from .ir import Function, Instr

@@ -10,7 +10,7 @@ attention scores mask to -inf.  No replay ever happens.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,10 +19,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ASSIGNED, ArchConfig, get, param_count
+from repro.configs.base import ArchConfig, get, param_count
 from repro.launch import mesh as mesh_mod
 from repro.launch.hlo_cost import analyze_hlo
-from repro.models.model import build_model, group_count, group_pattern
+from repro.models.model import build_model
 from repro.train.train_step import make_train_step
 
 SHAPES = {
@@ -160,7 +160,6 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
             psh = mesh_mod.shard_pytree_specs(pshapes, cfg, mesh, fsdp=False)
             v_ax = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
             logits_sh = NamedSharding(mesh, P(dp, v_ax))
-            mem_kw = {}
             mem_spec = None
             if cfg.family == "encdec":
                 mem_spec = ins.pop("frames")

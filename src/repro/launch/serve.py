@@ -10,7 +10,7 @@ import time
 
 import numpy as np
 
-from repro.configs.base import ASSIGNED, get, smoke
+from repro.configs.base import get, smoke
 from repro.serve.engine import Engine, Request
 
 

@@ -8,7 +8,6 @@ the TPU fast path (DESIGN.md §7).
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax

@@ -19,8 +19,7 @@ SSM states are stacked over groups and carried through the same scan.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,8 +82,6 @@ class Model(NamedTuple):
                              shared_w_down=dense(ks[6], (sf, d)))
                 return p
             if kind == "rwkv":
-                hd = cfg.hd
-                h = d // hd
                 return {
                     "ln": norm((d,)),
                     "mu": jnp.full((4, d), 0.5, dt),

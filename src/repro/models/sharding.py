@@ -10,7 +10,7 @@ constraint is a no-op.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple, Union
+from typing import Tuple, Union
 
 import jax
 from jax.sharding import PartitionSpec as P

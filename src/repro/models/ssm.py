@@ -5,7 +5,7 @@ selective-SSM block (for the Jamba hybrid).  Linear recurrences run as
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

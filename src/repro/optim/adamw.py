@@ -4,7 +4,7 @@ params/(fsdp×tp) × (2 + 8) bytes for bf16 params + f32 moments.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

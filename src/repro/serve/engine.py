@@ -6,9 +6,8 @@ fixed-capacity superset, poisoned/empty slots masked).  Greedy sampling.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp

@@ -2,8 +2,7 @@
 error-feedback gradient compression ahead of the DP all-reduce."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -5,14 +5,14 @@ multi-host story is the same loop per host with jax.distributed initialize
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from ..data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from ..data.pipeline import DataConfig, SyntheticLM
 from ..models.model import build_model
 from .checkpoint import CheckpointManager
 from .fault import FaultConfig, FaultMonitor

@@ -1,0 +1,214 @@
+"""Benchmark-harness plumbing: fork-pool determinism, the --quick matrix,
+env-knob validation, and the compare.py regression gate.
+
+These tests guard the CI tiers themselves: the bench-gate job is only
+trustworthy if the pool fan-out is bit-deterministic, the quick subset is
+what it claims to be, and the gate's pass/fail logic is exact.
+"""
+import json
+
+import pytest
+
+from benchmarks import compare as bench_compare
+from benchmarks import dae_table1
+from conftest import dae_test_seed
+
+PARITY_BENCHES = ("hist", "thr")  # the two cheapest kernels
+
+
+# ---------------------------------------------------------------------------
+# fork-pool determinism
+# ---------------------------------------------------------------------------
+
+
+def test_pool_rows_identical_to_sequential(capsys):
+    """DAE_BENCH_JOBS>1 must produce byte-identical JSON rows to jobs=1."""
+    seq = dae_table1.main(jobs=1, benches=PARITY_BENCHES)
+    par = dae_table1.main(jobs=2, benches=PARITY_BENCHES)
+    capsys.readouterr()  # silence the tables
+    assert json.dumps(seq, sort_keys=True) == json.dumps(par, sort_keys=True)
+
+
+def test_env_jobs_matches_explicit(monkeypatch, capsys):
+    monkeypatch.setenv("DAE_BENCH_JOBS", "2")
+    via_env = dae_table1.main(jobs=None, benches=PARITY_BENCHES)
+    monkeypatch.delenv("DAE_BENCH_JOBS")
+    explicit = dae_table1.main(jobs=1, benches=PARITY_BENCHES)
+    capsys.readouterr()
+    assert json.dumps(via_env, sort_keys=True) == \
+        json.dumps(explicit, sort_keys=True)
+
+
+@pytest.mark.parametrize("bad", ["banana", "1.5", "2 workers"])
+def test_malformed_jobs_env_rejected(monkeypatch, bad):
+    monkeypatch.setenv("DAE_BENCH_JOBS", bad)
+    with pytest.raises(SystemExit, match="DAE_BENCH_JOBS"):
+        dae_table1._resolve_jobs(None, 4)
+
+
+def test_jobs_env_defaults_and_clamps(monkeypatch):
+    monkeypatch.setenv("DAE_BENCH_JOBS", "0")
+    assert dae_table1._resolve_jobs(None, 2) >= 1  # 0 = one per core
+    monkeypatch.setenv("DAE_BENCH_JOBS", "64")
+    assert dae_table1._resolve_jobs(None, 3) == 3  # clamped to task count
+    monkeypatch.delenv("DAE_BENCH_JOBS")
+    assert dae_table1._resolve_jobs(1, 9) == 1
+
+
+# ---------------------------------------------------------------------------
+# the --quick matrix
+# ---------------------------------------------------------------------------
+
+
+def test_quick_benches_subset():
+    from repro.bench_irregular import ALL
+    assert set(dae_table1.QUICK_BENCHES) < set(ALL)
+
+
+def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
+    """run.py --quick must pass the reduced matrix to every DAE section
+    and skip the jax sections entirely."""
+    from benchmarks import dae_fig7, dae_quiescent, dae_table2, run as bench_run
+
+    calls = {}
+
+    def fake_table1(jobs=None, benches=None, **kw):
+        calls["table1"] = {"jobs": jobs, "benches": benches}
+        return [{"bench": "hist", "sta": 100, "dae": 300, "spec": 50,
+                 "oracle": 45, "window_hit": 0.1}]
+
+    def fake_table2(rates=None, **kw):
+        calls["table2"] = {"rates": rates}
+        return {"hist": [100, 101, 102]}
+
+    def fake_fig7(jobs=None, max_levels=None, **kw):
+        calls["fig7"] = {"max_levels": max_levels}
+        return [(1, 1, 1, 1, 0.0, 0.0)]
+
+    def fake_quiescent(points=None, **kw):
+        calls["quiescent"] = {"points": points}
+        return {"speedup": 3.5, "hit": 0.9, "rows": []}
+
+    monkeypatch.setattr(dae_table1, "main", fake_table1)
+    monkeypatch.setattr(dae_table2, "main", fake_table2)
+    monkeypatch.setattr(dae_fig7, "main", fake_fig7)
+    monkeypatch.setattr(dae_quiescent, "main", fake_quiescent)
+
+    out = tmp_path / "bench.json"
+    bench_run.main(["--quick", "--json", str(out)])
+    capsys.readouterr()
+
+    assert calls["table1"]["benches"] == dae_table1.QUICK_BENCHES
+    assert calls["table1"]["jobs"] == 1  # quick defaults to sequential
+    assert calls["table2"]["rates"] == [0.0, 0.6, 1.0]
+    assert calls["fig7"]["max_levels"] == 4
+    assert calls["quiescent"]["points"] == dae_quiescent.QUICK_POINTS
+    rows = json.loads(out.read_text())
+    names = [r["name"] for r in rows]
+    assert names == ["dae_table1", "dae_table2", "dae_fig7", "dae_quiescent"]
+    assert "moe_ab" not in names and "kernel_bench" not in names
+
+
+def test_window_flag_propagates(monkeypatch, tmp_path, capsys):
+    from benchmarks import dae_fig7, dae_quiescent, dae_table2, run as bench_run
+    import os
+
+    seen = {}
+
+    def fake_table1(jobs=None, benches=None, **kw):
+        seen["window_env"] = os.environ.get("DAE_SIM_WINDOW")
+        return [{"bench": "hist", "sta": 100, "dae": 300, "spec": 50,
+                 "oracle": 45, "window_hit": 0.0}]
+
+    monkeypatch.setattr(dae_table1, "main", fake_table1)
+    monkeypatch.setattr(dae_table2, "main",
+                        lambda rates=None, **kw: {"hist": [1, 1, 1]})
+    monkeypatch.setattr(dae_fig7, "main",
+                        lambda jobs=None, max_levels=None, **kw:
+                        [(1, 1, 1, 1, 0.0, 0.0)])
+    monkeypatch.setattr(dae_quiescent, "main",
+                        lambda points=None, **kw:
+                        {"speedup": 1.0, "hit": 0.0, "rows": []})
+    bench_run.main(["--quick", "--json", str(tmp_path / "a.json")])
+    assert seen["window_env"] == "1"
+    bench_run.main(["--quick", "--no-window",
+                    "--json", str(tmp_path / "b.json")])
+    capsys.readouterr()
+    assert seen["window_env"] == "0"
+
+
+# ---------------------------------------------------------------------------
+# compare.py — the bench gate
+# ---------------------------------------------------------------------------
+
+
+def _write(path, rows):
+    path.write_text(json.dumps(
+        [{"name": n, "us_per_call": us, "derived": ""} for n, us in rows]))
+    return str(path)
+
+
+def test_gate_passes_within_tolerance(tmp_path, capsys):
+    base = _write(tmp_path / "base.json", [("a", 100.0), ("b", 200.0)])
+    new = _write(tmp_path / "new.json", [("a", 110.0), ("b", 150.0)])
+    assert bench_compare.main([new, "--baseline", base]) == 0
+    assert "PASS" in capsys.readouterr().out
+
+
+def test_gate_fails_on_regression(tmp_path, capsys):
+    base = _write(tmp_path / "base.json", [("a", 100.0), ("b", 200.0)])
+    new = _write(tmp_path / "new.json", [("a", 126.0), ("b", 200.0)])
+    assert bench_compare.main([new, "--baseline", base]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out and "a" in out
+
+
+def test_gate_tolerance_flag(tmp_path, capsys):
+    base = _write(tmp_path / "base.json", [("a", 100.0)])
+    new = _write(tmp_path / "new.json", [("a", 150.0)])
+    assert bench_compare.main([new, "--baseline", base,
+                               "--tolerance", "0.6"]) == 0
+    capsys.readouterr()
+
+
+def test_gate_ignores_mismatched_sections(tmp_path, capsys):
+    """quick vs full matrices differ; only the intersection is gated."""
+    base = _write(tmp_path / "base.json", [("a", 100.0), ("full_only", 9.0)])
+    new = _write(tmp_path / "new.json", [("a", 100.0), ("quick_only", 5.0)])
+    assert bench_compare.main([new, "--baseline", base]) == 0
+    capsys.readouterr()
+
+
+def test_gate_rejects_empty_intersection(tmp_path):
+    base = _write(tmp_path / "base.json", [("a", 100.0)])
+    new = _write(tmp_path / "new.json", [("b", 100.0)])
+    with pytest.raises(SystemExit, match="no common"):
+        bench_compare.main([new, "--baseline", base])
+
+
+def test_gate_rejects_malformed_rows(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps([{"name": "a"}]))  # no us_per_call
+    good = _write(tmp_path / "good.json", [("a", 1.0)])
+    with pytest.raises(SystemExit, match="malformed"):
+        bench_compare.main([str(bad), "--baseline", good])
+
+
+# ---------------------------------------------------------------------------
+# DAE_TEST_SEED — the single fallback-seed knob
+# ---------------------------------------------------------------------------
+
+
+def test_test_seed_default_and_override(monkeypatch):
+    monkeypatch.delenv("DAE_TEST_SEED", raising=False)
+    assert dae_test_seed() == 0xDAE
+    monkeypatch.setenv("DAE_TEST_SEED", "1234")
+    assert dae_test_seed() == 1234
+    monkeypatch.setenv("DAE_TEST_SEED", "0x10")
+    assert dae_test_seed() == 16
+
+
+def test_test_seed_malformed_rejected(monkeypatch):
+    monkeypatch.setenv("DAE_TEST_SEED", "not-a-seed")
+    with pytest.raises(RuntimeError, match="DAE_TEST_SEED"):
+        dae_test_seed()

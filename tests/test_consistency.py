@@ -17,10 +17,14 @@ try:  # property-based sweep when hypothesis is available ...
 except ImportError:  # ... seeded-random fallback loop otherwise
     HAVE_HYPOTHESIS = False
 
+from conftest import dae_test_seed
 from repro.core import interp, machine, pipeline, randprog
 
-# deterministic stand-in sample for environments without hypothesis
-_FALLBACK_SEEDS = sorted(random.Random(0xDAE).sample(range(100_000), 40))
+# deterministic stand-in sample for environments without hypothesis,
+# seeded from the single DAE_TEST_SEED knob (default fixed constant) so
+# CI reruns draw the identical sample
+_FALLBACK_SEEDS = sorted(
+    random.Random(dae_test_seed()).sample(range(100_000), 40))
 
 
 def _check(seed: int, n_iter: int = 24) -> None:
@@ -47,7 +51,7 @@ def _check(seed: int, n_iter: int = 24) -> None:
 
 
 if HAVE_HYPOTHESIS:
-    @settings(max_examples=60, deadline=None)
+    @settings(max_examples=60, deadline=None, derandomize=True)
     @given(st.integers(min_value=0, max_value=100_000))
     def test_lemma_6_1_random_programs(seed):
         _check(seed)

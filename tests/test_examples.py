@@ -3,7 +3,6 @@ import os
 import runpy
 import sys
 
-import pytest
 
 # `examples` is a plain directory at the repo root (not an installed pkg)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -6,7 +6,6 @@ flops of one).
 """
 import os
 
-import numpy as np
 import pytest
 
 import jax

@@ -9,6 +9,11 @@ with the shipping simulator over every ``bench_irregular`` workload and a
 sweep of ``randprog`` programs, and requires *exact* equality of cycles,
 committed/poisoned store counts, load counts, sync waits, LSQ high-water,
 per-array store traces, and final memory.
+
+Every workload runs the shipping simulator **twice** — event-stepped
+(``batch_window=False``) and batch-windowed (``batch_window=True``) — and
+both must match the frozen reference exactly, so windowed execution is
+held to the same bit-for-bit bar as the event rewrite was.
 """
 import numpy as np
 import pytest
@@ -27,17 +32,32 @@ RESULT_FIELDS = ("cycles", "stores_committed", "stores_poisoned",
 RANDPROG_SEEDS = list(range(24))
 
 
-def _assert_same_run(tag, agu, cu, memory, decoupled, params=None):
+def _assert_same_run(tag, agu, cu, memory, decoupled, params=None,
+                     width=None):
     mem_ref = {k: v.copy() for k, v in memory.items()}
-    mem_new = {k: v.copy() for k, v in memory.items()}
-    r_ref = refm.run_dae(agu, cu, mem_ref, decoupled, params)
-    r_new = machine.run_dae(agu, cu, mem_new, decoupled, params)
-    for f in RESULT_FIELDS:
-        assert getattr(r_ref, f) == getattr(r_new, f), \
-            f"{tag}: {f} ref={getattr(r_ref, f)} new={getattr(r_new, f)}"
-    assert r_ref.store_trace == r_new.store_trace, f"{tag}: store_trace"
-    for k in mem_ref:
-        assert np.array_equal(mem_ref[k], mem_new[k]), f"{tag}: memory {k}"
+    ref_cfg = refm.MachineConfig(width=width) if width else None
+    r_ref = refm.run_dae(agu, cu, mem_ref, decoupled, params, ref_cfg)
+    for windowed in (False, True):
+        mem_new = {k: v.copy() for k, v in memory.items()}
+        cfg = machine.MachineConfig(batch_window=windowed,
+                                    **({"width": width} if width else {}))
+        r_new = machine.run_dae(agu, cu, mem_new, decoupled, params, cfg)
+        mode = "win" if windowed else "evt"
+        for f in RESULT_FIELDS:
+            assert getattr(r_ref, f) == getattr(r_new, f), \
+                (f"{tag}/{mode}: {f} ref={getattr(r_ref, f)} "
+                 f"new={getattr(r_new, f)}")
+        assert r_ref.store_trace == r_new.store_trace, \
+            f"{tag}/{mode}: store_trace"
+        for k in mem_ref:
+            assert np.array_equal(mem_ref[k], mem_new[k]), \
+                f"{tag}/{mode}: memory {k}"
+        if not windowed:
+            assert r_new.window_cycles == 0 and r_new.window_grants == 0, \
+                f"{tag}: windows fired with batch_window=False"
+        else:
+            assert 0 <= r_new.window_cycles <= r_new.cycles, \
+                f"{tag}: window_cycles out of range"
 
 
 @pytest.mark.parametrize("bench", sorted(ALL))
@@ -161,7 +181,8 @@ def test_narrow_dtype_bit_identical(dtype):
 
 def test_interpreted_sliceproc_matches_compiled():
     """The interpreted SliceProc fallback is the spec the compiler must
-    match: force it on and compare against the reference model too."""
+    match: force it on and compare against the reference model too (both
+    event-stepped and windowed — the fallback honours windows as well)."""
     from repro.core.sim import compile as simc
     g = randprog.generate(7, n_iter=24)
     comp = pipeline.compile_spec(g.fn, g.decoupled)
@@ -172,3 +193,71 @@ def test_interpreted_sliceproc_matches_compiled():
                          g.memory, g.decoupled)
     finally:
         simc.compile_slice = orig
+
+
+# ---------------------------------------------------------------------------
+# Batch-window execution (quiescent-stretch fast path)
+# ---------------------------------------------------------------------------
+
+
+def _quiescent_case(chain=64, n=64):
+    from benchmarks.dae_quiescent import build_quiescent
+    fn, mem = build_quiescent(n=n, chain=chain)
+    return pipeline.compile_spec(fn, {"A"}), mem
+
+
+@pytest.mark.parametrize("width", [1, 4])
+def test_quiescent_windowed_bit_identical(width):
+    """The workload shape windows are for: compute-bound CU on a narrow
+    slice.  Windowed execution must match the frozen reference exactly
+    and must actually fire (otherwise this test guards nothing)."""
+    comp, mem = _quiescent_case()
+    _assert_same_run(f"quiescent/w{width}", comp.agu, comp.cu, mem, {"A"},
+                     width=width)
+    cfg = machine.MachineConfig(batch_window=True, width=width)
+    mem2 = {k: v.copy() for k, v in mem.items()}
+    r = machine.run_dae(comp.agu, comp.cu, mem2, {"A"}, cfg=cfg)
+    assert r.window_grants > 0, "no windows granted on a quiescent workload"
+    assert r.window_hit_rate > 0.5, \
+        f"window hit rate {r.window_hit_rate:.3f} too low for this shape"
+
+
+def test_quiescent_windowed_interpreted():
+    """Window consumption in the interpreted SliceProc fallback (the
+    readable spec) is bit-identical too, and also fires."""
+    from repro.core.sim import compile as simc
+    comp, mem = _quiescent_case(chain=32, n=32)
+    orig = simc.compile_slice
+    try:
+        simc.compile_slice = lambda fn: None
+        _assert_same_run("quiescent/interp", comp.agu, comp.cu, mem, {"A"},
+                         width=1)
+        cfg = machine.MachineConfig(batch_window=True, width=1)
+        mem2 = {k: v.copy() for k, v in mem.items()}
+        r = machine.run_dae(comp.agu, comp.cu, mem2, {"A"}, cfg=cfg)
+        assert r.window_cycles > 0, "interpreted fallback never consumed"
+    finally:
+        simc.compile_slice = orig
+
+
+def test_event_queue_next_two():
+    """next_two is the spec of the machine loop's inlined grant scan."""
+    from repro.core.sim.events import INF, EventQueue
+
+    class U:
+        def __init__(self, wake):
+            self.wake = wake
+
+    evq = EventQueue()
+    a, b, c = U(5), U(2), U(9)
+    for u in (a, b, c):
+        evq.register(u)
+    w1, u1, w2 = evq.next_two()
+    assert (w1, u1, w2) == (2, b, 5)
+    b.wake = 5  # tie: second-earliest equals earliest, forbidding a grant
+    w1, u1, w2 = evq.next_two()
+    assert w1 == 5 and w2 == 5
+    for u in (a, b, c):
+        u.wake = INF
+    w1, u1, w2 = evq.next_two()
+    assert w1 is INF and u1 is None

@@ -1,5 +1,4 @@
 """Structural tests for §3.2 decoupling, §5.1 hoisting, §5.2/5.3 poisoning."""
-import numpy as np
 
 from repro.core import lod, pipeline
 from repro.core.ir import Function
