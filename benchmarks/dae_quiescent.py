@@ -82,7 +82,10 @@ def run_point(width: int, chain: int, repeats: int = 3) -> Dict:
     comp = pipeline.compile_spec(fn, {"A"})
     rows: Dict[bool, Dict] = {}
     for win in (False, True):
-        cfg = MachineConfig(batch_window=win, width=width)
+        # pin the pipeline engine off on both sides: this section is the
+        # quiescent batch-window A/B and must not inherit DAE_SIM_PIPELINE
+        cfg = MachineConfig(batch_window=win, pipeline_window=False,
+                            width=width)
 
         def once(cfg=cfg):
             m2 = {k: v.copy() for k, v in mem.items()}

@@ -97,13 +97,72 @@ def run_one(name: str, cfg: MachineConfig = None) -> Dict:
         "size_spec": code_size(comp.agu) + code_size(comp.cu),
         "spec_requests": comp.spec.spec_requests,
         "fallbacks": len(comp.spec.fallback),
-        # batch-window diagnostics (0.0 unless DAE_SIM_WINDOW / cfg opts in)
+        # window diagnostics (0.0 unless DAE_SIM_WINDOW / DAE_SIM_PIPELINE
+        # / cfg opts in): combined coverage + the pipeline-window share
         "window_hit": round(spec.result.window_hit_rate, 3),
+        "pipe_hit": round(spec.result.pipeline_hit_rate, 3),
     }
     return row
 
 
 QUICK_BENCHES = ("hist", "thr", "mm", "spmv")  # the small kernels
+
+# the load-dense kernels the steady-state A/B reports on: memory-bound
+# shapes where the AGU/CU/LSQ set is busy nearly every cycle, so the
+# quiescent batch window of PR 2 almost never fired (~2-10% hit)
+STEADY_BENCHES = ("spmv", "hist", "sort", "fw")
+
+
+def steady_ab(benches=STEADY_BENCHES, repeats: int = 7):
+    """Sim-only A/B on the load-dense kernels: event-stepped engine vs
+    steady-state pipeline windows (``MachineConfig(pipeline_window=True)``)
+    on the same compiled SPEC slices.  Runs are interleaved so box drift
+    cancels; results are asserted bit-identical before timing is trusted.
+    Returns one row per kernel with the wall speedup and the fraction of
+    simulated cycles covered by pipeline windows."""
+    import time
+
+    from repro.core import machine
+
+    rows = []
+    for name in benches:
+        case = ALL[name]()
+        comp = pipeline.compile_spec(case.fn, case.decoupled)
+
+        def once(pipe: bool):
+            mem = {k: v.copy() for k, v in case.memory.items()}
+            # pin batch windows off on both sides: this is the
+            # event-stepped vs pipeline A/B and must not inherit the
+            # DAE_SIM_WINDOW opt-in run.py exports for the other sections
+            cfg = MachineConfig(batch_window=False, pipeline_window=pipe)
+            r = machine.run_dae(comp.agu, comp.cu, mem, case.decoupled,
+                                case.params, cfg)
+            return r, mem
+
+        r_evt, m_evt = once(False)
+        r_pipe, m_pipe = once(True)
+        assert r_evt.cycles == r_pipe.cycles, f"{name}: cycles diverged"
+        for k in m_evt:
+            assert np.array_equal(m_evt[k], m_pipe[k]), \
+                f"{name}: memory diverged under pipeline windows"
+        b_evt = b_pipe = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            once(False)
+            b_evt = min(b_evt, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            once(True)
+            b_pipe = min(b_pipe, time.perf_counter() - t0)
+        rows.append({
+            "bench": name,
+            "cycles": r_pipe.cycles,
+            "cover": round(r_pipe.pipeline_hit_rate, 3),
+            "grants": r_pipe.pipeline_grants,
+            "evt_ms": round(b_evt * 1e3, 2),
+            "pipe_ms": round(b_pipe * 1e3, 2),
+            "speedup": round(b_evt / b_pipe, 2),
+        })
+    return rows
 
 
 def main(out_json: str = None, jobs: Optional[int] = None,

@@ -10,10 +10,12 @@ coarse rate sweep, no jax sections) that finishes in well under a minute —
 wired into ``make bench-quick``.  ``benchmarks/compare.py`` diffs two such
 JSON drops and is the CI bench-gate.
 
-The DAE sections run with batch-window execution enabled (the simulator's
-quiescent-stretch fast path — see ``repro.core.machine``); pass
-``--no-window`` for the plain event-stepped engine.  The ``dae_quiescent``
-section always measures both modes against each other.
+The DAE sections run with batch-window execution and steady-state
+pipeline windows enabled (the simulator's fast paths — see
+``repro.core.machine``); pass ``--no-window`` / ``--no-pipeline`` for the
+slower engines.  The ``dae_quiescent`` section always measures
+batch-window on/off against each other, and the ``dae_steady`` section
+A/Bs pipeline windows on the paper's load-dense kernels.
 """
 from __future__ import annotations
 
@@ -43,19 +45,25 @@ def main(argv=None) -> None:
     ap.add_argument("--no-window", dest="window", action="store_false",
                     help="run the DAE sections on the plain event-stepped "
                          "engine instead of batch-window execution")
+    ap.add_argument("--no-pipeline", dest="pipeline", action="store_false",
+                    help="disable steady-state pipeline windows (the "
+                         "multi-unit window engine) in the DAE sections")
     args = ap.parse_args(argv)
-    # propagate the window opt-in to fork-pool workers via the env knob,
-    # restoring the caller's value on exit (in-process callers like the
+    # propagate the window opt-ins to fork-pool workers via the env knobs,
+    # restoring the caller's values on exit (in-process callers like the
     # harness tests must not see their environment silently rewritten)
-    prev_window = os.environ.get("DAE_SIM_WINDOW")
+    prev = {k: os.environ.get(k)
+            for k in ("DAE_SIM_WINDOW", "DAE_SIM_PIPELINE")}
     os.environ["DAE_SIM_WINDOW"] = "1" if args.window else "0"
+    os.environ["DAE_SIM_PIPELINE"] = "1" if args.pipeline else "0"
     try:
         _run_sections(args)
     finally:
-        if prev_window is None:
-            os.environ.pop("DAE_SIM_WINDOW", None)
-        else:
-            os.environ["DAE_SIM_WINDOW"] = prev_window
+        for k, v in prev.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
 
 
 def _run_sections(args) -> None:
@@ -82,8 +90,32 @@ def _run_sections(args) -> None:
 
     spec_hm = hm([r["sta"] / r["spec"] for r in t1])
     win_hit = sum(r["window_hit"] for r in t1) / len(t1)
+    pipe_hit = sum(r["pipe_hit"] for r in t1) / len(t1)
     rows.append(("dae_table1", us1,
-                 f"spec_hm_speedup={spec_hm:.2f}x,win_hit={win_hit:.3f}"))
+                 f"spec_hm_speedup={spec_hm:.2f}x,win_hit={win_hit:.3f},"
+                 f"pipe_hit={pipe_hit:.3f}"))
+
+    print()
+    print("=" * 72)
+    print("Steady-state pipeline windows — load-dense sim A/B "
+          "(event vs pipeline engine)")
+    print("=" * 72)
+    sb = (dae_table1.STEADY_BENCHES[:2] if quick
+          else dae_table1.STEADY_BENCHES)
+    st, uss = _timed(lambda: dae_table1.steady_ab(
+        benches=sb, repeats=3 if quick else 7))
+    hdr = (f"{'bench':6s} {'cycles':>8s} {'cover':>6s} {'grants':>7s} "
+           f"{'evt ms':>8s} {'pipe ms':>8s} {'speedup':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in st:
+        print(f"{r['bench']:6s} {r['cycles']:8d} {100 * r['cover']:5.1f}% "
+              f"{r['grants']:7d} {r['evt_ms']:8.2f} {r['pipe_ms']:8.2f} "
+              f"{r['speedup']:7.2f}x")
+    derived = ",".join(f"{r['bench']}={r['speedup']:.2f}x/{r['cover']:.2f}"
+                       for r in st)
+    rows.append(("dae_steady", uss,
+                 f"{derived},min_cover={min(r['cover'] for r in st):.2f}"))
 
     print()
     print("=" * 72)

@@ -30,19 +30,39 @@ implementation (kept as the golden oracle in
 ``tests/ref_machine_cyclestep.py`` and asserted against in
 ``tests/test_sim_equivalence.py``).
 
-On top of the event scheduler sits opt-in **batch-window execution**
-(``MachineConfig(batch_window=True)``, or ``DAE_SIM_WINDOW=1`` machine
-wide): when the wakeup scan shows that a single slice process is the only
-unit able to make progress before cycle T — no FIFO edge, no LSQ
-retirement, no poison event can fire in between — the machine grants it
-the window ``[now, T)`` and the process advances through the whole
-stretch in one step instead of one event per cycle, clamping the window
-whenever one of its own FIFO edges wakes the LSQ early.  Windowed runs
-are bit-identical to both the event-stepped and the cycle-stepped models
-(same equivalence suite); ``MachineResult.window_grants`` /
-``window_cycles`` / ``window_hit_rate`` report how often the fast path
-fired, and ``benchmarks/dae_quiescent.py`` measures the wall-time win on
-quiescent-heavy workloads.
+On top of the event scheduler sit two opt-in window engines:
+
+* **Batch windows** (``MachineConfig(batch_window=True)``, or
+  ``DAE_SIM_WINDOW=1`` machine wide): when the wakeup scan shows that a
+  single slice process is the only unit able to make progress before
+  cycle T — no FIFO edge, no LSQ retirement, no poison event can fire in
+  between — the machine grants it the window ``[now, T)`` and the
+  process advances through the whole stretch in one step instead of one
+  event per cycle, clamping the window whenever one of its own FIFO
+  edges wakes the LSQ early.
+* **Steady-state pipeline windows**
+  (``MachineConfig(pipeline_window=True)``, or ``DAE_SIM_PIPELINE=1``;
+  implies the slice grant above): the multi-unit extension for the
+  paper's load-dense kernels, where AGU, CU, and LSQ are all busy nearly
+  every cycle and quiescent windows almost never fire.  A sole-runnable
+  LSQ advances through its stretch with the compiled run-tick
+  (``LSQ.tick_run`` — arrival-sorted retirement and in-order commit runs
+  collapse into single FIFO splices), and stretches with >= 2 units
+  runnable back to back run under one grant in the steady regime loop
+  (``Machine._steady``), which keeps the reference AGU→CU→DU phase order
+  without the per-cycle orchestration.  See
+  :mod:`repro.core.sim.events` for the proof obligations of both grant
+  shapes.
+
+Windowed runs of either kind are bit-identical to the event-stepped and
+cycle-stepped models — the three-engine differential suite
+(``tests/test_sim_equivalence.py``) runs every workload in every mode.
+``MachineResult`` accounts the kinds separately (``window_grants`` /
+``window_cycles`` for slice windows, ``pipeline_grants`` /
+``pipeline_cycles`` for multi-unit grants; ``window_hit_rate`` is the
+combined coverage); ``benchmarks/dae_quiescent.py`` measures the
+wall-time win on quiescent-heavy workloads and ``benchmarks/dae_table1.py``
+the coverage/wall A/B on the paper's load-dense kernels.
 
 Invariants the event wiring preserves (and that any new unit must also
 honour — see :mod:`repro.core.sim.events` for why):

@@ -10,10 +10,20 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Tuple
 
 
+def _env_flag(name: str) -> bool:
+    return os.environ.get(name, "").strip().lower() in (
+        "1", "true", "yes", "on")
+
+
 def _env_batch_window() -> bool:
     """Opt-in default for batch-window execution (``DAE_SIM_WINDOW=1``)."""
-    return os.environ.get("DAE_SIM_WINDOW", "").strip().lower() in (
-        "1", "true", "yes", "on")
+    return _env_flag("DAE_SIM_WINDOW")
+
+
+def _env_pipeline_window() -> bool:
+    """Opt-in default for steady-state pipeline windows
+    (``DAE_SIM_PIPELINE=1``)."""
+    return _env_flag("DAE_SIM_PIPELINE")
 
 
 @dataclass
@@ -32,6 +42,16 @@ class MachineConfig:
     # event-stepped and cycle-stepped models (tests/test_sim_equivalence.py);
     # opt in per-config or machine-wide via DAE_SIM_WINDOW=1.
     batch_window: bool = field(default_factory=_env_batch_window)
+    # steady-state pipeline windows: extends the window theorem from "sole
+    # runnable slice" to multi-unit grants — a sole-runnable LSQ advances
+    # through its stretch with the compiled run-tick (batched retirement
+    # and commit runs), and stretches where >=2 units are runnable
+    # every cycle (the load-dense steady pattern: AGU pushing, CU
+    # consuming, LSQ retiring one load per cycle) run under a single grant
+    # in the steady regime loop.  Implies slice batch windows.  Opt in
+    # per-config or machine-wide via DAE_SIM_PIPELINE=1; bit-identical to
+    # all other engines (tests/test_sim_equivalence.py).
+    pipeline_window: bool = field(default_factory=_env_pipeline_window)
 
 
 @dataclass
@@ -43,11 +63,16 @@ class MachineResult:
     sync_waits: int = 0
     store_trace: Dict[str, List[Tuple[int, Any]]] = field(default_factory=dict)
     lsq_high_water: int = 0
-    # batch-window statistics (diagnostic only — never part of the
-    # bit-exactness contract): how many windows were granted and how many
-    # simulated cycles were consumed inside them.
+    # window statistics, split by kind (diagnostic only — never part of
+    # the bit-exactness contract).  Quiescent windows: a sole-runnable
+    # slice consumed the stretch itself (PR 2's batch windows).  Pipeline
+    # windows: a multi-unit steady-state grant — either the compiled LSQ
+    # run-tick advanced a sole-runnable LSQ, or the steady regime loop
+    # carried the whole runnable unit set through the stretch.
     window_grants: int = 0
     window_cycles: int = 0
+    pipeline_grants: int = 0
+    pipeline_cycles: int = 0
 
     @property
     def misspec_rate(self) -> float:
@@ -56,8 +81,20 @@ class MachineResult:
 
     @property
     def window_hit_rate(self) -> float:
-        """Fraction of simulated cycles executed inside batch windows."""
+        """Fraction of simulated cycles covered by any window kind."""
+        if not self.cycles:
+            return 0.0
+        return (self.window_cycles + self.pipeline_cycles) / self.cycles
+
+    @property
+    def quiescent_hit_rate(self) -> float:
+        """Fraction of simulated cycles consumed inside slice windows."""
         return self.window_cycles / self.cycles if self.cycles else 0.0
+
+    @property
+    def pipeline_hit_rate(self) -> float:
+        """Fraction of simulated cycles covered by pipeline windows."""
+        return self.pipeline_cycles / self.cycles if self.cycles else 0.0
 
 
 class Deadlock(RuntimeError):

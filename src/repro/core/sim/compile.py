@@ -340,10 +340,10 @@ def _compile_slice(fn: Function):
             elif op == "send_ld":
                 s = sym(instr.array)
                 sync = bool(instr.meta.get("sync"))
-                body.append(f"{ind}self.blocked_on = "
-                            f"'send_ld {instr.array}'")
                 body.append(f"{ind}while len(_reqq_{s}) >= _reqcap_{s}:")
                 body.append(f"{ind}    self.park = _pkpushreq_{s}")
+                body.append(f"{ind}    self.blocked_on = "
+                            f"'send_ld {instr.array}'")
                 yield_sync(f"{ind}    ")
                 body.append(f"{ind}    budget = W")
                 body.append(f"{ind}self.park = None")
@@ -356,8 +356,6 @@ def _compile_slice(fn: Function):
                             f"_wend = _lsq_{s}.wake")
                 if sync:
                     body.append(f"{ind}self.res.sync_waits += 1")
-                    body.append(f"{ind}self.blocked_on = "
-                                f"'sync_resp {instr.array}'")
                     body.append(f"{ind}while not (_respq_{s} and "
                                 f"_respq_{s}[0][0] <= _clk):")
                     body.append(f"{ind}    if _respq_{s} and "
@@ -366,6 +364,8 @@ def _compile_slice(fn: Function):
                     body.append(f"{ind}        budget = W")
                     body.append(f"{ind}        continue")
                     body.append(f"{ind}    self.park = _pkpopresp_{s}")
+                    body.append(f"{ind}    self.blocked_on = "
+                                f"'sync_resp {instr.array}'")
                     yield_sync(f"{ind}    ")
                     body.append(f"{ind}    budget = W")
                     body.append(f"{ind}self.park = None")
@@ -375,13 +375,12 @@ def _compile_slice(fn: Function):
                                 f"_lsq_{s}.wake = _clk")
                     body.append(f"{ind}if _lsq_{s}.wake < _wend: "
                                 f"_wend = _lsq_{s}.wake")
-                body.append(f"{ind}self.blocked_on = ''")
             elif op == "send_st":
                 s = sym(instr.array)
-                body.append(f"{ind}self.blocked_on = "
-                            f"'send_st {instr.array}'")
                 body.append(f"{ind}while len(_reqq_{s}) >= _reqcap_{s}:")
                 body.append(f"{ind}    self.park = _pkpushreq_{s}")
+                body.append(f"{ind}    self.blocked_on = "
+                            f"'send_st {instr.array}'")
                 yield_sync(f"{ind}    ")
                 body.append(f"{ind}    budget = W")
                 body.append(f"{ind}self.park = None")
@@ -392,11 +391,8 @@ def _compile_slice(fn: Function):
                             f"_lsq_{s}.wake = _t")
                 body.append(f"{ind}if _lsq_{s}.wake < _wend: "
                             f"_wend = _lsq_{s}.wake")
-                body.append(f"{ind}self.blocked_on = ''")
             elif op == "consume_ld":
                 s = sym(instr.array)
-                body.append(f"{ind}self.blocked_on = "
-                            f"'consume_ld {instr.array}'")
                 body.append(f"{ind}while not (_ldvq_{s} and "
                             f"_ldvq_{s}[0][0] <= _clk):")
                 body.append(f"{ind}    if _ldvq_{s} and "
@@ -405,6 +401,8 @@ def _compile_slice(fn: Function):
                 body.append(f"{ind}        budget = W")
                 body.append(f"{ind}        continue")
                 body.append(f"{ind}    self.park = _pkpopldv_{s}")
+                body.append(f"{ind}    self.blocked_on = "
+                            f"'consume_ld {instr.array}'")
                 yield_sync(f"{ind}    ")
                 body.append(f"{ind}    budget = W")
                 body.append(f"{ind}self.park = None")
@@ -414,7 +412,6 @@ def _compile_slice(fn: Function):
                             f"_lsq_{s}.wake = _clk")
                 body.append(f"{ind}if _lsq_{s}.wake < _wend: "
                             f"_wend = _lsq_{s}.wake")
-                body.append(f"{ind}self.blocked_on = ''")
             elif op in ("produce_st", "poison_st"):
                 s = sym(instr.array)
                 if op == "poison_st":
@@ -429,10 +426,10 @@ def _compile_slice(fn: Function):
                     tok = "_POISON"
                 else:
                     tok = val(instr.args[0])
-                body.append(f"{ind}self.blocked_on = "
-                            f"'{op} {instr.array}'")
                 body.append(f"{ind}while len(_stvq_{s}) >= _stvcap_{s}:")
                 body.append(f"{ind}    self.park = _pkpushstv_{s}")
+                body.append(f"{ind}    self.blocked_on = "
+                            f"'{op} {instr.array}'")
                 yield_sync(f"{ind}    ")
                 body.append(f"{ind}    budget = W")
                 body.append(f"{ind}self.park = None")
@@ -442,7 +439,6 @@ def _compile_slice(fn: Function):
                             f"_lsq_{s}.wake = _t")
                 body.append(f"{ind}if _lsq_{s}.wake < _wend: "
                             f"_wend = _lsq_{s}.wake")
-                body.append(f"{ind}self.blocked_on = ''")
                 ind = "                "
             elif op == "print":
                 body.append(f"{ind}pass")

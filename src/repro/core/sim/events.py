@@ -56,6 +56,48 @@ interleaving normally carries:
 A window is therefore *permission*, not obligation: a process that
 ignores ``window_end`` (e.g. the interpreted fallback mid-park) simply
 yields every cycle, which is the reference behaviour.
+
+Steady-state pipeline windows (the multi-unit extension)
+--------------------------------------------------------
+The quiescent theorem above grants a window to a *single slice process*.
+``MachineConfig(pipeline_window=True)`` extends the grant to the other
+two shapes the wakeup scan can prove, which together cover the
+steady-state pipeline pattern of load-dense kernels (AGU pushing one
+request, CU consuming one value, LSQ retiring one load per cycle with
+``mem_lat`` loads in flight — the pattern PR 2's windows could never
+cover):
+
+* **Sole-runnable LSQ** — symmetric to the slice case: when the earliest
+  wake belongs to an LSQ and every other unit's wake is ≥ T, the LSQ is
+  granted ``[now, T)`` and advances through it with the compiled run-tick
+  (:meth:`repro.core.sim.units.LSQ.tick_run`).  The proof obligations
+  mirror the slice grant: no other unit can run before T absent the
+  LSQ's own mutations, and every FIFO edge the LSQ performs lowers
+  exactly one slice's ``wake`` monotonically — the run re-checks both
+  slice wakes before entering each further cycle, which is the clamp.
+  Inside the run, stretches whose per-cycle effect is provably a single
+  retirement (all in-flight loads issued, no store in flight, no request
+  or store-value arrival before the horizon) or a single in-order commit
+  (every queued store valued) collapse into one arrival-sorted splice
+  (:meth:`repro.core.sim.fifo.Fifo.push_run`) instead of one Python
+  iteration per cycle.
+* **Steady multi-unit set** — when the earliest and second-earliest
+  wakes coincide (≥ 2 units runnable *now*), no unit can be skipped, but
+  the whole runnable set can be granted the stretch jointly: the machine
+  enters the steady regime loop, which executes the same AGU → CU → DU
+  phase order cycle by cycle while the set stays ≥ 2 and contiguous
+  (every next wake exactly one cycle ahead), without the per-cycle
+  orchestration the outer loop carries (grant scans, window read-backs,
+  termination checks).  The regime exits — back to the outer loop, which
+  may grant a quiescent or LSQ window — as soon as a gap opens or the
+  runnable set thins to one unit.  Bit-exactness is by construction:
+  each cycle inside the regime performs exactly the phase sequence the
+  reference model would.
+
+Both pipeline shapes are accounted separately from quiescent windows
+(``MachineResult.pipeline_grants`` / ``pipeline_cycles``): coverage
+reported for load-dense kernels is the fraction of simulated cycles that
+ran under a multi-unit grant.
 """
 from __future__ import annotations
 
@@ -109,3 +151,13 @@ class EventQueue:
             elif uw < w2:
                 w2 = uw
         return w1, u1, w2
+
+    def runnable(self, cycle) -> List[object]:
+        """Units whose pending wakeup is due at or before ``cycle``.
+
+        The spec (and test hook) for the steady-state grant: a pipeline
+        window may carry the machine through a stretch exactly while this
+        set has ≥ 2 members every cycle (see the module docstring) —
+        equivalently, while ``next_two`` keeps returning ``w1 == w2``.
+        """
+        return [u for u in self.units if u.wake <= cycle]

@@ -17,6 +17,16 @@ whoever a state change might unblock (the inlined fast path of
 
 Timestamps ride with the items: the queue holds ``(arrival_cycle, item)``.
 
+``push_run``/``pop_run`` are the bulk-transfer forms of the same edges:
+one splice moves a whole arrival-stamped run and collapses the wakeup
+edges into the single minimum the scalar sequence would have left behind
+(producer/consumer wakes are monotone minima).  ``push_run`` carries the
+compiled LSQ run-tick (:meth:`repro.core.sim.units.LSQ.tick_run`), which
+retires an arrival-sorted run of loads in one step inside a pipeline
+window; ``pop_run`` is its symmetric counterpart for the not-yet-built
+accept-run fast path — both are held to the scalar sequence by the
+property tests in ``tests/test_sim_windows.py``.
+
 FIFO edges are also what bound **batch windows**: a slice process granted
 a quiescent window (see :mod:`repro.core.sim.events`) may consume cycles
 on its own only while no other unit can run, so after every ``push``/
@@ -65,6 +75,67 @@ class Fifo:
                 if t < p.wake:
                     p.wake = t
             del w[:]
+
+    def push_run(self, now: int, stamped: List[Any]) -> None:
+        """Bulk push of pre-stamped ``(arrival, item)`` pairs as one splice.
+
+        Semantically identical to pushing the items one at a time at their
+        stamped cycles (arrivals must be non-decreasing and the caller must
+        have checked capacity for the whole run — back-pressure is a grant
+        precondition, not re-checked here).  The wakeup edges collapse: a
+        parked consumer's ``wake`` only ever takes the *minimum*, so waking
+        it for the first arrival is exactly what n sequential pushes would
+        have left behind; the owning LSQ (if it reads this FIFO) likewise
+        wakes for the first arrival.  Used by the compiled LSQ run-tick
+        (:meth:`repro.core.sim.units.LSQ.tick_run`) to retire an
+        arrival-sorted run of loads in one step.
+        """
+        if not stamped:
+            return
+        self.q.extend(stamped)
+        first = stamped[0][0]
+        if self.lsq_on_push:
+            lsq = self.lsq
+            if first < lsq.wake:
+                lsq.wake = first
+        w = self.pop_waiters
+        if w:
+            t = first if first > now else now + 1
+            for p in w:
+                if t < p.wake:
+                    p.wake = t
+            del w[:]
+
+    def pop_run(self, now: int, k: int) -> List[Any]:
+        """Bulk pop of ``k`` items as one splice; returns the items.
+
+        Equivalent to ``k`` sequential ``pop`` calls made at cycles
+        ``now .. now+k-1`` (the caller guarantees every popped head had
+        arrived by its pop cycle): each pop would wake a parked producer at
+        ``pop_cycle + 1`` and producer wakes are monotone minima, so one
+        edge at ``now + 1`` is what the sequence would have left behind.
+        The LSQ-on-pop edge lowers the owner's wake to ``now`` exactly as
+        the first sequential pop would.
+
+        No production caller yet: this is the request-side splice the
+        run-tick's accept-run extension will use (see ROADMAP follow-ups);
+        until then it is exercised by the bulk-FIFO property tests only.
+        """
+        q = self.q
+        items = [q.popleft()[1] for _ in range(k)]
+        if k:
+            if self.lsq_on_pop:
+                lsq = self.lsq
+                if now < lsq.wake:
+                    lsq.wake = now
+            w = self.push_waiters
+            if w:
+                t = now + 1
+                for p in w:
+                    if t < p.wake:
+                        p.wake = t
+                del w[:]
+        return items
 
     def can_pop(self, now: int) -> bool:
         return bool(self.q) and self.q[0][0] <= now

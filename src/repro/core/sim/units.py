@@ -16,12 +16,23 @@ The three units of the Fig. 1 template, recast as event-driven processes:
   than dicts purely for speed.  After a tick that made no progress it
   reports the next *timed* cycle anything could change (earliest request /
   store-value arrival, earliest load completion) so the machine can jump
-  time forward.
+  time forward.  ``tick_run`` is the **compiled tick** behind pipeline
+  windows: granted a sole-runnable stretch, it advances through it in one
+  call, collapsing provable streaming shapes (an arrival-sorted run of
+  load retirements, an in-order run of store commits) into single splices
+  and falling back to the scalar ``tick`` — its spec — everywhere else.
 
 :class:`Machine` owns the scheduler loop.  Per executed cycle the phase
 order is AGU, CU, then each LSQ in sorted-array order — identical to the
 reference model, which is what makes the two bit-identical (see
-``tests/test_sim_equivalence.py``).
+``tests/test_sim_equivalence.py``).  With
+``MachineConfig(pipeline_window=True)`` the loop additionally grants
+steady-state multi-unit windows: stretches where >= 2 units stay
+runnable back to back run inside ``Machine._steady`` (the regime loop —
+same phase order, none of the per-cycle orchestration), and
+sole-runnable LSQ stretches run under ``LSQ.tick_run``.  The
+three-engine differential suite holds every mode to the same
+bit-for-bit bar.
 """
 from __future__ import annotations
 
@@ -52,7 +63,8 @@ _SSEQ, _SADDR, _SVAL, _SPOISON, _SHASVAL = range(5)
 class LSQ:
     __slots__ = ("array", "mem", "mem_list", "mem_hi", "cfg", "ldq", "stq",
                  "mem_lat", "res", "seq", "loads", "stores", "n_valued", "epoch", "_cast",
-                 "req", "ld_val", "agu_resp", "st_val", "wake", "_trace")
+                 "req", "ld_val", "agu_resp", "st_val", "wake", "_trace",
+                 "_peers")
 
     def __init__(self, array: str, mem: np.ndarray, cfg: MachineConfig,
                  res: MachineResult):
@@ -83,6 +95,8 @@ class LSQ:
         self.epoch = 0
         self.wake: float = INF
         self._trace = None  # res.store_trace[array], bound on first commit
+        self._peers: list = [self]  # every LSQ of the machine (incl. self),
+        # rebound by the Machine — tick_run's termination fence needs them
         # FIFOs (filled in by the Machine)
         self.req: Fifo = None  # type: ignore[assignment]
         self.ld_val: Fifo = None  # type: ignore[assignment]
@@ -100,6 +114,7 @@ class LSQ:
         busy = False
         loads = self.loads
         stores = self.stores
+        res = self.res
 
         # 1. accept one request from the AGU
         req = self.req
@@ -222,12 +237,12 @@ class LSQ:
                             self._deliver(ldv, now, ld[_LVAL])
                             self._deliver(resp, now, ld[_LVAL])
                             loads.pop(0)
-                            self.res.loads_served += 1
+                            res.loads_served += 1
                             busy = True
                     else:
                         self._deliver(ldv, now, ld[_LVAL])
                         loads.pop(0)
-                        self.res.loads_served += 1
+                        res.loads_served += 1
                         busy = True
 
         # 5. in-order store commit (1 write port)
@@ -235,7 +250,7 @@ class LSQ:
             st = stores[0]
             if st[_SHASVAL]:
                 if st[_SPOISON]:
-                    self.res.stores_poisoned += 1
+                    res.stores_poisoned += 1
                 else:
                     a = int(st[_SADDR])
                     if not (0 <= a <= self.mem_hi):
@@ -243,10 +258,10 @@ class LSQ:
                             f"non-poisoned store out of bounds: "
                             f"{self.array}[{a}]")
                     self.mem_list[a] = self._cast(st[_SVAL]).item()
-                    self.res.stores_committed += 1
+                    res.stores_committed += 1
                     trace = self._trace
                     if trace is None:
-                        trace = self._trace = self.res.store_trace.setdefault(
+                        trace = self._trace = res.store_trace.setdefault(
                             self.array, [])
                     trace.append((a, st[_SVAL]))
                 stores.pop(0)
@@ -255,8 +270,8 @@ class LSQ:
                 busy = True
 
         occ = len(loads) + len(stores)
-        if occ > self.res.lsq_high_water:
-            self.res.lsq_high_water = occ
+        if occ > res.lsq_high_water:
+            res.lsq_high_water = occ
 
         # schedule own wakeup: busy → run again next cycle; idle → only
         # time can unblock from inside (request/store-value arrival, load
@@ -279,6 +294,171 @@ class LSQ:
                     w = d
             self.wake = w
         return busy
+
+    def tick_run(self, start: int, end, agu, cu) -> int:
+        """Advance this LSQ alone through ``[start, end)`` — the compiled
+        tick behind sole-LSQ pipeline windows.
+
+        Grant premise (discharged by the machine's wakeup scan): no other
+        unit has a pending wakeup before ``end``.  Every FIFO edge this
+        LSQ performs may lower a slice's ``wake`` into the run, so both
+        slice wakes are re-read before entering each further cycle — the
+        run clamp, mirroring the slice-window clamp.  Two provable steady
+        shapes collapse into one step instead of one scalar tick per
+        cycle:
+
+        * **retirement runs** — every in-flight load issued, no store in
+          flight, no request arrival before the horizon: the only
+          per-cycle effect is the in-order delivery of the head load, so
+          an arrival-sorted run of completed loads retires as one splice
+          (:meth:`~repro.core.sim.fifo.Fifo.push_run`), preserving
+          in-order delivery and the one-delivery-per-cycle discipline
+          (delivery cycles ``c_i = max(c_{i-1}+1, done_i)``);
+        * **commit runs** — every queued store valued, no load in flight,
+          no request arrival before the horizon: stores commit in order,
+          one per cycle, poisoned stores retiring without writing
+          (no-replay), as one pass over the valued prefix — commits raise
+          no wakeup edge, so the run is bounded only by the horizon.
+
+        Everything else falls through to the scalar ``tick``, cycle for
+        cycle (with in-run time jumps over idle gaps), so the run is
+        bit-identical to per-cycle execution by construction
+        (property-tested against the scalar tick on randomized schedules
+        in ``tests/test_sim_windows.py``).  Returns the last cycle
+        executed; ``self.wake`` is left correct for the next scan.
+        """
+        now = start
+        loads = self.loads
+        stores = self.stores
+        rq = self.req.q
+        res = self.res
+        while True:
+            # horizon: cycles [now, hz) are provably free of external
+            # arrivals (request head) and of any other unit's wakeup.
+            # Store-value heads never bound a batch: with no store in
+            # flight (retirement run) or every store valued (commit run)
+            # the st_val accept step is inert until a new store request
+            # is accepted, and requests are capped separately.
+            hz = end
+            aw = agu.wake
+            if aw < hz:
+                hz = aw
+            cw = cu.wake
+            if cw < hz:
+                hz = cw
+            batched = False
+            if rq:
+                a = rq[0][0]
+                if a < hz:
+                    hz = a
+                req_quiet = a > now
+            else:
+                req_quiet = True
+            if req_quiet and hz > now + 1:
+                if not stores:
+                    # ---- retirement run ----
+                    ld0 = loads[0] if loads else None
+                    if (ld0 is not None and ld0[_LDONE] is not None
+                            and ld0[_LDONE] <= now
+                            and all(ld[_LDONE] is not None for ld in loads)):
+                        ldv = self.ld_val
+                        room = ldv.depth - len(ldv.q)
+                        lat = ldv.lat
+                        cap = hz
+                        if ldv.pop_waiters:
+                            # the first push wakes the parked consumer at
+                            # its arrival; cycles from there aren't ours
+                            first_wake = now + lat if lat > 0 else now + 1
+                            if first_wake < cap:
+                                cap = first_wake
+                        stamped = []
+                        c = now - 1
+                        for ld in loads:
+                            if len(stamped) >= room or ld[_LSYNC]:
+                                break
+                            c2 = c + 1
+                            d = ld[_LDONE]
+                            if d > c2:
+                                c2 = d
+                            if c2 >= cap:
+                                break
+                            stamped.append((c2 + lat, ld[_LVAL]))
+                            c = c2
+                        k = len(stamped)
+                        if k > 1:
+                            ldv.push_run(now, stamped)
+                            del loads[:k]
+                            res.loads_served += k
+                            # scalar ticks record occupancy per cycle; a
+                            # shrinking run's max is after its first cycle
+                            occ = len(loads) + k - 1
+                            if occ > res.lsq_high_water:
+                                res.lsq_high_water = occ
+                            now = c
+                            self.wake = c + 1
+                            batched = True
+                elif not loads and self.n_valued == len(stores):
+                    # ---- commit run ----
+                    k = len(stores)
+                    span = hz - now
+                    if k > span:
+                        k = span
+                    if k > 1:
+                        trace = self._trace
+                        mem_list = self.mem_list
+                        hi = self.mem_hi
+                        cast = self._cast
+                        for i in range(k):
+                            st = stores[i]
+                            if st[_SPOISON]:
+                                res.stores_poisoned += 1
+                            else:
+                                a = int(st[_SADDR])
+                                if not (0 <= a <= hi):
+                                    raise RuntimeError(
+                                        f"non-poisoned store out of bounds: "
+                                        f"{self.array}[{a}]")
+                                mem_list[a] = cast(st[_SVAL]).item()
+                                res.stores_committed += 1
+                                if trace is None:
+                                    trace = self._trace = \
+                                        res.store_trace.setdefault(
+                                            self.array, [])
+                                trace.append((a, st[_SVAL]))
+                        occ = len(stores) - 1  # after the first commit
+                        if occ > res.lsq_high_water:
+                            res.lsq_high_water = occ
+                        del stores[:k]
+                        self.n_valued -= k
+                        self.epoch += k
+                        now = now + k - 1
+                        self.wake = now + 1
+                        batched = True
+            if not batched:
+                self.tick(now)  # scalar cycle: the readable spec
+            # machine-termination fence: the outer loop checks "slices
+            # done + all LSQs drained" between cycles and records the
+            # cycle count there, so the run must not coast past the drain
+            # point on the busy tick's own next-cycle wakeup
+            if agu.done and cu.done:
+                for lsq in self._peers:
+                    if not lsq.drained():
+                        break
+                else:
+                    return now
+            # run clamp: stop before the first cycle any other unit (or
+            # the grant end) could claim; jump idle gaps inside the run
+            nxt = self.wake
+            limit = end
+            aw = agu.wake
+            if aw < limit:
+                limit = aw
+            cw = cu.wake
+            if cw < limit:
+                limit = cw
+            if nxt >= limit:
+                return now
+            now = nxt
 
     @staticmethod
     def _deliver(fifo: Fifo, now: int, value: Any) -> None:
@@ -562,6 +742,10 @@ class Machine:
         agu_local = {a: memory[a].copy() for a in memory if a not in decoupled}
         cu_local = {a: memory[a] for a in memory if a not in decoupled}
 
+        peers = list(self.lsqs.values())
+        for lsq in peers:
+            lsq._peers = peers
+
         self.agu_p = SliceProc("AGU", agu, params, agu_local, self.lsqs,
                                cfg, res, True)
         self.cu_p = SliceProc("CU", cu, params, cu_local, self.lsqs,
@@ -588,13 +772,17 @@ class Machine:
     def _run(self) -> MachineResult:
         evq, res, cfg = self.evq, self.res, self.cfg
         agu_p, cu_p = self.agu_p, self.cu_p
-        lsq_list = list(self.lsqs.values())
+        lsq_list = self._lsq_list = list(self.lsqs.values())
         lsq0 = lsq_list[0] if len(lsq_list) == 1 else None
-        agu_gen = agu_p.make_gen()
-        cu_gen = cu_p.make_gen()
+        agu_gen = self._agu_gen = agu_p.make_gen()
+        cu_gen = self._cu_gen = cu_p.make_gen()
+        agu_next = agu_gen.__next__
+        cu_next = cu_gen.__next__
         agu_p.wake = cu_p.wake = 0
         max_cycles = cfg.max_cycles
-        windowing = cfg.batch_window
+        pipelining = cfg.pipeline_window
+        # pipeline windows subsume the quiescent slice-window grant
+        windowing = cfg.batch_window or pipelining
         units = evq.units
 
         now = 0
@@ -613,9 +801,10 @@ class Machine:
                                    else park[1].pop_waiters)
                         if agu_p in waiters:
                             waiters.remove(agu_p)
+                        agu_p.blocked_on = ""  # re-set if it parks again
                     agu_p._now = now
                     try:
-                        next(agu_gen)
+                        agu_next()
                     except StopIteration:
                         pass
                     t2 = agu_p._now  # window read-back: cycles it consumed
@@ -646,9 +835,10 @@ class Machine:
                                    else park[1].pop_waiters)
                         if cu_p in waiters:
                             waiters.remove(cu_p)
+                        cu_p.blocked_on = ""  # re-set if it parks again
                     cu_p._now = now
                     try:
-                        next(cu_gen)
+                        cu_next()
                     except StopIteration:
                         pass
                     t2 = cu_p._now  # window read-back: cycles it consumed
@@ -708,6 +898,17 @@ class Machine:
                 raise Deadlock(self._diag(now))
             if w1 > max_cycles:
                 raise Deadlock("cycle budget exceeded: " + self._diag(w1))
+            if pipelining and w2 == w1:
+                # >=2 units runnable at w1: the steady-state pipeline
+                # pattern.  Grant the whole runnable set the stretch and
+                # advance it in the steady regime loop; control returns
+                # here (phases above no-op: every wake > last) when a gap
+                # opens or the set thins to one unit.
+                res.pipeline_grants += 1
+                last = self._steady(w1)
+                res.pipeline_cycles += last - w1
+                now = last
+                continue
             if windowing and (u1 is agu_p or u1 is cu_p):
                 # sole runnable unit before w2 is a slice process: grant it
                 # the window [w1, w2) — capped so a runaway compute loop
@@ -716,7 +917,189 @@ class Machine:
                 if end > w1 + 1:
                     u1.window_end = end
                     res.window_grants += 1
+            elif pipelining:
+                # sole runnable unit before w2 is an LSQ: grant it the
+                # window [w1, w2) and advance it with the compiled
+                # run-tick (same cap as the slice grant)
+                end = w2 if w2 <= max_cycles else max_cycles + 1
+                if end > w1 + 1:
+                    res.pipeline_grants += 1
+                    u1.wake = INF
+                    last = u1.tick_run(w1, end, agu_p, cu_p)
+                    res.pipeline_cycles += last - w1
+                    now = last
+                    continue
             now = w1
+
+    def _steady(self, now: int) -> int:
+        """Steady-regime loop: the multi-unit pipeline window.
+
+        Entered when the wakeup scan shows >= 2 units runnable at ``now``
+        (``w2 == w1`` — the shape neither the quiescent slice window nor
+        the LSQ run-tick can cover).  Executes the reference AGU → CU →
+        DU phase order cycle by cycle, staying in the regime while the
+        runnable set keeps >= 2 members each consecutive cycle, without
+        the outer loop's per-cycle orchestration: no grant scan, no
+        termination scan, no window read-back (no slice window can be
+        granted inside the regime, so ``_now`` never runs ahead and
+        ``window_end`` stays 0).  Returns the last executed cycle; every
+        unit's ``wake`` is then > that cycle, so the outer loop's phase
+        blocks no-op and control lands on its termination check and scan.
+
+        The slice-phase blocks below are the third and fourth copies of
+        ``_run``'s deliberately duplicated pair (per-cycle call overhead
+        counts in both loops).  Any change to park/resume semantics must
+        be applied to ALL FOUR copies — _run:AGU, _run:CU, here:AGU,
+        here:CU — or the engines drift apart in ways only the deadlock
+        diagnostics reveal.
+        """
+        agu_p, cu_p = self.agu_p, self.cu_p
+        agu_next = self._agu_gen.__next__
+        cu_next = self._cu_gen.__next__
+        lsq_list = self._lsq_list
+        lsq0 = lsq_list[0] if len(lsq_list) == 1 else None
+        max_cycles = self.cfg.max_cycles
+        while True:
+            # --- slice phase (AGU then CU, as in the reference model) ---
+            if agu_p.wake <= now:
+                agu_p.wake = INF
+                if not agu_p.done:
+                    park = agu_p.park
+                    if park is not None:
+                        waiters = (park[1].push_waiters
+                                   if park[0] == PARK_PUSH
+                                   else park[1].pop_waiters)
+                        if agu_p in waiters:
+                            waiters.remove(agu_p)
+                        agu_p.blocked_on = ""  # re-set if it parks again
+                    agu_p._now = now
+                    try:
+                        agu_next()
+                    except StopIteration:
+                        pass
+                    if not agu_p.done:
+                        park = agu_p.park
+                        if park is None:
+                            agu_p.wake = now + 1
+                        elif park[0] == PARK_PUSH:
+                            park[1].push_waiters.append(agu_p)
+                        else:
+                            fifo = park[1]
+                            fifo.pop_waiters.append(agu_p)
+                            if fifo.q:  # head not yet arrived: timed wake
+                                arr = fifo.q[0][0]
+                                t = arr if arr > now else now + 1
+                                if t < agu_p.wake:
+                                    agu_p.wake = t
+            if cu_p.wake <= now:
+                cu_p.wake = INF
+                if not cu_p.done:
+                    park = cu_p.park
+                    if park is not None:
+                        waiters = (park[1].push_waiters
+                                   if park[0] == PARK_PUSH
+                                   else park[1].pop_waiters)
+                        if cu_p in waiters:
+                            waiters.remove(cu_p)
+                        cu_p.blocked_on = ""  # re-set if it parks again
+                    cu_p._now = now
+                    try:
+                        cu_next()
+                    except StopIteration:
+                        pass
+                    if not cu_p.done:
+                        park = cu_p.park
+                        if park is None:
+                            cu_p.wake = now + 1
+                        elif park[0] == PARK_PUSH:
+                            park[1].push_waiters.append(cu_p)
+                        else:
+                            fifo = park[1]
+                            fifo.pop_waiters.append(cu_p)
+                            if fifo.q:  # head not yet arrived: timed wake
+                                arr = fifo.q[0][0]
+                                t = arr if arr > now else now + 1
+                                if t < cu_p.wake:
+                                    cu_p.wake = t
+
+            # --- DU phase ---
+            nxt = now + 1
+            if lsq0 is not None:
+                if lsq0.wake <= now:
+                    lsq0.wake = INF
+                    lsq0.tick(now)
+                lw = lsq0.wake
+                aw = agu_p.wake
+                cw = cu_p.wake
+                if aw < cw:
+                    a0, a1 = aw, cw
+                else:
+                    a0, a1 = cw, aw
+                if lw < a0:
+                    w1, w2 = lw, a0
+                elif lw < a1:
+                    w1, w2 = a0, lw
+                else:
+                    w1, w2 = a0, a1
+            else:
+                w1 = w2 = INF
+                for lsq in lsq_list:
+                    if lsq.wake <= now:
+                        lsq.wake = INF
+                        lsq.tick(now)
+                    lw = lsq.wake
+                    if lw < w1:
+                        w2 = w1
+                        w1 = lw
+                    elif lw < w2:
+                        w2 = lw
+                aw = agu_p.wake
+                if aw < w1:
+                    w2 = w1
+                    w1 = aw
+                elif aw < w2:
+                    w2 = aw
+                cw = cu_p.wake
+                if cw < w1:
+                    w2 = w1
+                    w1 = cw
+                elif cw < w2:
+                    w2 = cw
+
+            # --- regime boundary.  Stay while the next cycle keeps >= 2
+            #     units runnable (the steady pattern); ride solo cycles
+            #     whose follow-up wake is one cycle out (no window could
+            #     be granted there anyway — a grant needs w2 > w1 + 1);
+            #     jump idle gaps whose far side resumes the steady
+            #     pattern; advance a grantable sole-runnable LSQ with the
+            #     compiled run-tick in place.  Hand back to the outer
+            #     loop for slice-window grants, terminal states, and the
+            #     cycle budget ---
+            if nxt > max_cycles:
+                return now  # outer scan trips the cycle budget
+            if aw > nxt and cw > nxt and agu_p.done and cu_p.done:
+                # drain phase: the outer loop's termination check runs
+                # between cycles and records the cycle count there, so
+                # the regime must not coast past the drain point
+                for lsq in lsq_list:
+                    if not lsq.drained():
+                        break
+                else:
+                    return now
+            if w1 != nxt:
+                if w2 == w1 and w1 <= max_cycles:
+                    now = w1  # gap, then >= 2 units runnable: jump inside
+                    continue
+                return now  # gap: outer loop jumps time (or terminates)
+            if w2 > nxt + 1:
+                if lsq0 is not None and lsq0.wake == nxt:
+                    # sole-runnable LSQ: compiled run-tick, in place
+                    lsq0.wake = INF
+                    end = w2 if w2 <= max_cycles else max_cycles + 1
+                    now = lsq0.tick_run(nxt, end, agu_p, cu_p)
+                    continue  # phase guards no-op; boundary recomputes
+                return now  # sole runnable slice: outer window grant
+            now = nxt
 
     def _diag(self, now) -> str:
         lines = [f"deadlock at cycle {now}:",

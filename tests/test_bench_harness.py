@@ -75,7 +75,13 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
     def fake_table1(jobs=None, benches=None, **kw):
         calls["table1"] = {"jobs": jobs, "benches": benches}
         return [{"bench": "hist", "sta": 100, "dae": 300, "spec": 50,
-                 "oracle": 45, "window_hit": 0.1}]
+                 "oracle": 45, "window_hit": 0.1, "pipe_hit": 0.1}]
+
+    def fake_steady(benches=None, repeats=None, **kw):
+        calls["steady"] = {"benches": benches, "repeats": repeats}
+        return [{"bench": "spmv", "cycles": 1000, "cover": 0.9,
+                 "grants": 5, "evt_ms": 2.0, "pipe_ms": 1.0,
+                 "speedup": 2.0}]
 
     def fake_table2(rates=None, **kw):
         calls["table2"] = {"rates": rates}
@@ -90,6 +96,7 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
         return {"speedup": 3.5, "hit": 0.9, "rows": []}
 
     monkeypatch.setattr(dae_table1, "main", fake_table1)
+    monkeypatch.setattr(dae_table1, "steady_ab", fake_steady)
     monkeypatch.setattr(dae_table2, "main", fake_table2)
     monkeypatch.setattr(dae_fig7, "main", fake_fig7)
     monkeypatch.setattr(dae_quiescent, "main", fake_quiescent)
@@ -100,12 +107,14 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
 
     assert calls["table1"]["benches"] == dae_table1.QUICK_BENCHES
     assert calls["table1"]["jobs"] == 1  # quick defaults to sequential
+    assert calls["steady"]["benches"] == dae_table1.STEADY_BENCHES[:2]
     assert calls["table2"]["rates"] == [0.0, 0.6, 1.0]
     assert calls["fig7"]["max_levels"] == 4
     assert calls["quiescent"]["points"] == dae_quiescent.QUICK_POINTS
     rows = json.loads(out.read_text())
     names = [r["name"] for r in rows]
-    assert names == ["dae_table1", "dae_table2", "dae_fig7", "dae_quiescent"]
+    assert names == ["dae_table1", "dae_steady", "dae_table2", "dae_fig7",
+                     "dae_quiescent"]
     assert "moe_ab" not in names and "kernel_bench" not in names
 
 
@@ -117,10 +126,16 @@ def test_window_flag_propagates(monkeypatch, tmp_path, capsys):
 
     def fake_table1(jobs=None, benches=None, **kw):
         seen["window_env"] = os.environ.get("DAE_SIM_WINDOW")
+        seen["pipeline_env"] = os.environ.get("DAE_SIM_PIPELINE")
         return [{"bench": "hist", "sta": 100, "dae": 300, "spec": 50,
-                 "oracle": 45, "window_hit": 0.0}]
+                 "oracle": 45, "window_hit": 0.0, "pipe_hit": 0.0}]
 
     monkeypatch.setattr(dae_table1, "main", fake_table1)
+    monkeypatch.setattr(dae_table1, "steady_ab",
+                        lambda benches=None, repeats=None, **kw:
+                        [{"bench": "spmv", "cycles": 1, "cover": 0.0,
+                          "grants": 0, "evt_ms": 1.0, "pipe_ms": 1.0,
+                          "speedup": 1.0}])
     monkeypatch.setattr(dae_table2, "main",
                         lambda rates=None, **kw: {"hist": [1, 1, 1]})
     monkeypatch.setattr(dae_fig7, "main",
@@ -131,10 +146,16 @@ def test_window_flag_propagates(monkeypatch, tmp_path, capsys):
                         {"speedup": 1.0, "hit": 0.0, "rows": []})
     bench_run.main(["--quick", "--json", str(tmp_path / "a.json")])
     assert seen["window_env"] == "1"
+    assert seen["pipeline_env"] == "1"
     bench_run.main(["--quick", "--no-window",
                     "--json", str(tmp_path / "b.json")])
-    capsys.readouterr()
     assert seen["window_env"] == "0"
+    assert seen["pipeline_env"] == "1"
+    bench_run.main(["--quick", "--no-pipeline",
+                    "--json", str(tmp_path / "c.json")])
+    capsys.readouterr()
+    assert seen["window_env"] == "1"
+    assert seen["pipeline_env"] == "0"
 
 
 # ---------------------------------------------------------------------------
@@ -212,3 +233,31 @@ def test_test_seed_malformed_rejected(monkeypatch):
     monkeypatch.setenv("DAE_TEST_SEED", "not-a-seed")
     with pytest.raises(RuntimeError, match="DAE_TEST_SEED"):
         dae_test_seed()
+
+
+# ---------------------------------------------------------------------------
+# repo hygiene: no stale bytecode ships
+# ---------------------------------------------------------------------------
+
+
+def test_no_bytecode_tracked_and_pycache_ignored():
+    """Stale ``__pycache__`` bytecode must never be committed (it shadows
+    edited sources in subtle ways) — nothing tracked may live under a
+    ``__pycache__`` dir or end in ``.pyc``, and the ignore rules must
+    cover ``benchmarks/__pycache__`` so it cannot come back."""
+    import pathlib
+    import shutil
+    import subprocess
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    if shutil.which("git") is None or not (root / ".git").exists():
+        pytest.skip("not a git checkout")
+    tracked = subprocess.run(["git", "ls-files"], cwd=root,
+                             capture_output=True, text=True).stdout
+    bad = [ln for ln in tracked.splitlines()
+           if "__pycache__" in ln or ln.endswith(".pyc")]
+    assert not bad, f"bytecode tracked in git: {bad}"
+    ignored = subprocess.run(
+        ["git", "check-ignore", "-q", "benchmarks/__pycache__/stale.pyc"],
+        cwd=root).returncode == 0
+    assert ignored, "benchmarks/__pycache__ is not git-ignored"

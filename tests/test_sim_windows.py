@@ -1,0 +1,313 @@
+"""Property tests for the steady-state fast paths.
+
+Three surfaces, each tested directly against its scalar spec rather than
+only end-to-end (the three-engine differential suite in
+``test_sim_equivalence.py`` covers the end-to-end bar):
+
+* **bulk FIFO transfers** — ``Fifo.push_run`` / ``pop_run`` must leave
+  exactly the queue contents, waiter lists, and wakeup edges that the
+  equivalent sequence of scalar ``push`` / ``pop`` calls would;
+* **the compiled LSQ tick** — ``LSQ.tick_run`` must match per-cycle
+  scalar ``tick`` execution bit for bit on randomized request / store
+  value / poison / latency schedules, including the run clamp when its
+  own edges wake a parked slice;
+* **window accounting** — ``window_cycles``/``pipeline_cycles`` bounded
+  by the simulated cycles, hit rates in [0, 1], and zero grants when the
+  corresponding mode is off.
+
+All randomized sweeps seed from the single ``DAE_TEST_SEED`` knob.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from conftest import dae_test_seed
+from repro.core import machine, randprog
+from repro.core.machine import MachineConfig, MachineResult, POISON
+from repro.core.sim.events import INF
+from repro.core.sim.fifo import Fifo
+from repro.core.sim.units import LSQ
+
+
+class _Stub:
+    """A parked unit: just a ``wake``/``done`` surface for edge checks."""
+
+    def __init__(self):
+        self.wake = INF
+        self.done = False
+
+
+def _seeds(n, salt=0):
+    base = dae_test_seed()
+    return [base * 1_000_003 + salt * 101 + i for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Bulk FIFO transfers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", _seeds(8, salt=1))
+def test_push_run_matches_sequential(seed):
+    rng = random.Random(seed)
+    lat = rng.choice([0, 1, 4])
+    depth = rng.randint(4, 12)
+    now = rng.randint(0, 50)
+    k = rng.randint(1, depth)
+    # delivery cycles strictly increase; arrivals ride lat cycles behind
+    cycles = sorted(rng.sample(range(now, now + 40), k))
+    cycles[0] = now
+    items = [rng.randint(-9, 9) for _ in range(k)]
+    stamped = [(c + lat, v) for c, v in zip(cycles, items)]
+
+    bulk, seq = Fifo("b", depth, lat), Fifo("s", depth, lat)
+    stub_b, stub_s = _Stub(), _Stub()
+    bulk.pop_waiters.append(stub_b)
+    seq.pop_waiters.append(stub_s)
+
+    bulk.push_run(now, stamped)
+    for c, v in zip(cycles, items):
+        seq.push(c, v)
+
+    assert list(bulk.q) == list(seq.q) == stamped  # conservation
+    assert stub_b.wake == stub_s.wake              # one collapsed edge
+    assert bulk.pop_waiters == seq.pop_waiters == []
+
+
+@pytest.mark.parametrize("seed", _seeds(8, salt=2))
+def test_pop_run_matches_sequential(seed):
+    rng = random.Random(seed)
+    lat = rng.choice([0, 1, 4])
+    depth = rng.randint(4, 12)
+    n = rng.randint(2, depth)
+    k = rng.randint(1, n)
+    now = 100
+
+    class _Owner:
+        wake = INF
+
+    def build():
+        f = Fifo("f", depth, lat)
+        f.lsq = _Owner()
+        f.lsq_on_pop = True
+        for i in range(n):
+            f.q.append((i, i * 10))
+        stub = _Stub()
+        f.push_waiters.append(stub)
+        return f, stub
+
+    bulk, stub_b = build()
+    seq, stub_s = build()
+
+    got_b = bulk.pop_run(now, k)
+    got_s = [seq.pop(now + i) for i in range(k)]
+
+    assert got_b == got_s                          # conservation
+    assert list(bulk.q) == list(seq.q)
+    assert stub_b.wake == stub_s.wake == now + 1   # back-pressure edge
+    assert bulk.lsq.wake == seq.lsq.wake == now    # LSQ-on-pop edge
+    assert bulk.push_waiters == seq.push_waiters == []
+
+
+def test_push_run_empty_is_noop():
+    f = Fifo("f", 4, 1)
+    stub = _Stub()
+    f.pop_waiters.append(stub)
+    f.push_run(0, [])
+    assert not f.q and stub.wake is INF and f.pop_waiters == [stub]
+
+
+# ---------------------------------------------------------------------------
+# Compiled LSQ tick vs scalar tick on randomized schedules
+# ---------------------------------------------------------------------------
+
+
+def _wire_lsq(mem, cfg):
+    res = MachineResult(cycles=0)
+    lsq = LSQ("A", mem, cfg, res)
+    lsq.req = Fifo("A.req", cfg.fifo_depth, cfg.fifo_lat)
+    lsq.ld_val = Fifo("A.ldval", cfg.fifo_depth, cfg.fifo_lat)
+    lsq.agu_resp = Fifo("A.resp", cfg.fifo_depth, cfg.fifo_lat)
+    lsq.st_val = Fifo("A.stval", cfg.fifo_depth, cfg.fifo_lat)
+    for f in (lsq.req, lsq.ld_val, lsq.agu_resp, lsq.st_val):
+        f.lsq = lsq
+    lsq.req.lsq_on_push = lsq.st_val.lsq_on_push = True
+    lsq.ld_val.lsq_on_pop = lsq.agu_resp.lsq_on_pop = True
+    return lsq, res
+
+
+def _random_schedule(rng, n_mem):
+    """Queued requests + store tokens with randomized arrivals/poison."""
+    n_req = rng.randint(1, 14)
+    t = 0
+    reqs, n_stores = [], 0
+    store_poison = []
+    for _ in range(n_req):
+        t += rng.choice([0, 0, 1, 1, 2, 7])
+        if rng.random() < 0.55:
+            addr = rng.randint(-2, n_mem + 1)  # clamps exercised
+            sync = rng.random() < 0.15
+            reqs.append((t, ("ld", addr, sync)))
+        else:
+            poison = rng.random() < 0.3
+            addr = (rng.randint(-3, n_mem + 2) if poison
+                    else rng.randint(0, n_mem - 1))
+            reqs.append((t, ("st", addr, False)))
+            store_poison.append(poison)
+            n_stores += 1
+    toks = []
+    t = rng.randint(0, 3)
+    for poison in store_poison:
+        t += rng.choice([0, 1, 1, 3])
+        toks.append((t, POISON if poison else rng.randint(-50, 50)))
+    return reqs, toks
+
+
+def _drive_scalar(lsq, agu, cu, start, end):
+    """Per-cycle reference: exactly what the machine loop would run while
+    the LSQ is the only unit with a pending wakeup."""
+    t = start
+    while t < end:
+        if agu.wake <= t or cu.wake <= t:
+            break  # an edge woke a slice: the stretch is over
+        w = lsq.wake
+        if w > t:
+            if w >= end:
+                break
+            t = int(w)
+            continue
+        lsq.wake = INF
+        lsq.tick(t)
+        t += 1
+    return lsq
+
+
+def _state(lsq, res, agu, cu):
+    return {
+        "loads": [list(x) for x in lsq.loads],
+        "stores": [list(x) for x in lsq.stores],
+        "seq": lsq.seq, "n_valued": lsq.n_valued, "epoch": lsq.epoch,
+        "wake": lsq.wake,
+        "req": list(lsq.req.q), "stval": list(lsq.st_val.q),
+        "ldval": list(lsq.ld_val.q), "resp": list(lsq.agu_resp.q),
+        "mem": list(lsq.mem_list),
+        "served": res.loads_served, "committed": res.stores_committed,
+        "poisoned": res.stores_poisoned, "hw": res.lsq_high_water,
+        "trace": dict(res.store_trace),
+        "agu_wake": agu.wake, "cu_wake": cu.wake,
+    }
+
+
+@pytest.mark.parametrize("seed", _seeds(24, salt=3))
+@pytest.mark.parametrize("parked", ["none", "req_push", "ldval_pop"])
+def test_tick_run_matches_scalar_tick(seed, parked):
+    rng = random.Random(seed * 7 + hash(parked) % 97)
+    n_mem = 16
+    cfg = MachineConfig(mem_lat=rng.choice([1, 2, 4, 7]),
+                        fifo_lat=rng.choice([0, 1, 4]),
+                        fifo_depth=16, ldq=rng.choice([2, 4]),
+                        stq=rng.choice([4, 32]))
+    reqs, toks = _random_schedule(rng, n_mem)
+    base = np.arange(n_mem, dtype=np.int64) * 3
+
+    runs = {}
+    for kind in ("scalar", "run"):
+        lsq, res = _wire_lsq(base.copy(), cfg)
+        lsq.req.q.extend(reqs)
+        lsq.st_val.q.extend(toks)
+        agu, cu = _Stub(), _Stub()
+        if parked == "req_push":
+            lsq.req.push_waiters.append(agu)
+        elif parked == "ldval_pop":
+            lsq.ld_val.pop_waiters.append(cu)
+        start = min(reqs[0][0], toks[0][0] if toks else reqs[0][0])
+        lsq.wake = start  # the push edge the machine wiring would apply
+        end = max(t for t, _ in reqs + toks) + 16 * (cfg.mem_lat + 4) + 8
+        if kind == "scalar":
+            _drive_scalar(lsq, agu, cu, start, end)
+        else:
+            last = lsq.tick_run(start, end, agu, cu)
+            assert start <= last < end
+        runs[kind] = _state(lsq, res, agu, cu)
+
+    assert runs["scalar"] == runs["run"]
+
+
+@pytest.mark.parametrize("seed", _seeds(6, salt=4))
+def test_tick_run_commit_run_drains_valued_stores(seed):
+    """A fully-valued store queue with quiet inputs is the commit-run
+    shape: the batched path must retire it exactly like scalar ticks,
+    poison retiring without writing (no-replay)."""
+    rng = random.Random(seed)
+    cfg = MachineConfig(fifo_depth=32, stq=32)
+    n = 12
+    base = np.zeros(8, dtype=np.int64)
+    queued = []
+    for i in range(n):
+        poison = rng.random() < 0.4
+        queued.append([i, rng.randint(0, 7), None if poison else i * 11,
+                       poison, True])
+    runs = {}
+    for kind in ("scalar", "run"):
+        lsq, res = _wire_lsq(base.copy(), cfg)
+        lsq.stores.extend([list(st) for st in queued])
+        lsq.n_valued = n
+        lsq.seq = n
+        lsq.wake = 5
+        agu, cu = _Stub(), _Stub()
+        if kind == "scalar":
+            _drive_scalar(lsq, agu, cu, 5, 200)
+        else:
+            lsq.tick_run(5, 200, agu, cu)
+        runs[kind] = _state(lsq, res, agu, cu)
+        assert not runs[kind]["stores"]
+    assert runs["scalar"] == runs["run"]
+    assert runs["run"]["committed"] + runs["run"]["poisoned"] == n
+
+
+# ---------------------------------------------------------------------------
+# Window accounting invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", _seeds(4, salt=5))
+@pytest.mark.parametrize("mode", ["evt", "win", "pipe", "both"])
+def test_window_accounting_invariants(seed, mode):
+    g = randprog.generate(seed % 1009, n_iter=20)
+    from repro.core import pipeline as pl
+    comp = pl.compile_spec(g.fn, g.decoupled)
+    cfg = MachineConfig(batch_window=mode in ("win", "both"),
+                        pipeline_window=mode in ("pipe", "both"))
+    mem = {k: v.copy() for k, v in g.memory.items()}
+    r = machine.run_dae(comp.agu, comp.cu, mem, g.decoupled, cfg=cfg)
+    assert 0 <= r.window_cycles and 0 <= r.pipeline_cycles
+    assert r.window_cycles + r.pipeline_cycles <= r.cycles
+    assert 0.0 <= r.window_hit_rate <= 1.0
+    assert 0.0 <= r.quiescent_hit_rate <= 1.0
+    assert 0.0 <= r.pipeline_hit_rate <= 1.0
+    if mode in ("evt", "pipe"):
+        pass  # slice windows may legitimately fire under pipe
+    if mode == "evt":
+        assert r.window_grants == 0 and r.window_cycles == 0
+    if mode in ("evt", "win"):
+        assert r.pipeline_grants == 0 and r.pipeline_cycles == 0
+
+
+@pytest.mark.parametrize("mode", ["evt", "win", "pipe"])
+def test_cycle_budget_deadlock_diagnostic(mode):
+    """The Deadlock path must produce its diagnostic in every engine mode
+    (a regression here once surfaced as AttributeError instead of the
+    Deadlock the caller catches)."""
+    from repro.bench_irregular import ALL
+    from repro.core import pipeline as pl
+    case = ALL["hist"]()
+    comp = pl.compile_spec(case.fn, case.decoupled)
+    cfg = MachineConfig(max_cycles=3,
+                        batch_window=mode == "win",
+                        pipeline_window=mode == "pipe")
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    from repro.core.machine import Deadlock
+    with pytest.raises(Deadlock, match="cycle budget exceeded"):
+        machine.run_dae(comp.agu, comp.cu, mem, case.decoupled,
+                        case.params, cfg)
