@@ -1,0 +1,96 @@
+"""dae_codegen — generated executable kernels vs the sequential interpreter.
+
+For each workload the SPEC pipeline is lowered by ``repro.codegen`` and the
+generated kernels are timed against ``interp.run`` on the same memory:
+
+* **numpy target** — AGU stream extraction + the emitted coroutine-free CU
+  state machine (both plain Python; the honest apples-to-apples number);
+* **jax target** — the same streams driven through the real
+  ``spec_gather``/``spec_scatter_add`` Pallas kernels (interpret mode on
+  CPU CI, so this wall number is a correctness-path cost, not a TPU
+  projection; the first call's trace/compile time is excluded by a
+  warm-up run).
+
+Bit-exactness against the interpreter is asserted before anything is
+timed — a wrong kernel must fail the bench, not post a fast number.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+#: benches and the (small) build kwargs the section runs
+BENCHES: Dict[str, dict] = {
+    "spmv": dict(n=16),
+    "hist": dict(n=128),
+}
+
+
+def _best_of(fn, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6  # us
+
+
+def main(benches: Optional[Dict[str, dict]] = None,
+         jax_benches: Optional[Iterable[str]] = None,
+         repeats: int = 3) -> Dict[str, Dict[str, float]]:
+    from repro import codegen
+    from repro.bench_irregular import ALL
+    from repro.core import interp, pipeline
+
+    benches = BENCHES if benches is None else benches
+    jax_benches = tuple(benches) if jax_benches is None else tuple(jax_benches)
+
+    out: Dict[str, Dict[str, float]] = {}
+    hdr = (f"{'bench':6s} {'interp us':>10s} {'numpy us':>10s} "
+           f"{'numpy_x':>8s} {'jax us':>10s} {'jax_x':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for name, kw in benches.items():
+        case = ALL[name](**kw)
+        comp = pipeline.compile_spec(case.fn, case.decoupled)
+        ref = {k: v.copy() for k, v in case.memory.items()}
+        interp.run(case.fn, ref, case.params)
+
+        def run_interp():
+            mem = {k: v.copy() for k, v in case.memory.items()}
+            interp.run(case.fn, mem, case.params)
+            return mem
+
+        def run_target(target):
+            mem = {k: v.copy() for k, v in case.memory.items()}
+            r = codegen.run(comp, mem, case.params, target=target)
+            return mem, r
+
+        # correctness gate before any timing
+        mem, r = run_target("numpy")
+        assert r.target_used == "numpy", r.fallback_reason
+        assert all(np.array_equal(ref[k], mem[k]) for k in ref), name
+
+        row = {"interp_us": _best_of(run_interp, repeats),
+               "numpy_us": _best_of(lambda: run_target("numpy"), repeats)}
+        row["numpy_x"] = row["interp_us"] / row["numpy_us"]
+
+        if name in jax_benches:
+            mem, r = run_target("jax")
+            assert r.target_used == "jax", r.fallback_reason
+            assert all(np.array_equal(ref[k], mem[k]) for k in ref), name
+            row["jax_us"] = _best_of(lambda: run_target("jax"), repeats)
+            row["jax_x"] = row["interp_us"] / row["jax_us"]
+
+        out[name] = row
+        jx = (f"{row['jax_us']:10.0f} {row['jax_x']:7.3f}x"
+              if "jax_us" in row else f"{'-':>10s} {'-':>8s}")
+        print(f"{name:6s} {row['interp_us']:10.0f} {row['numpy_us']:10.0f} "
+              f"{row['numpy_x']:7.2f}x {jx}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

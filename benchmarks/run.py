@@ -5,9 +5,9 @@ convention); `derived` carries the headline metric of each section.
 
 ``--json OUT`` additionally writes the rows to a JSON file (e.g.
 ``BENCH_machine.json``) so the perf trajectory is machine-readable across
-PRs.  ``--quick`` runs a reduced matrix (small kernels, shallow nesting,
-coarse rate sweep, no jax sections) that finishes in well under a minute —
-wired into ``make bench-quick``.  ``benchmarks/compare.py`` diffs two such
+PRs.  ``--quick`` runs a reduced matrix (small kernels, shallow nesting, coarse
+rate sweep, no jax *model* sections, a single-kernel codegen jax leg) that
+finishes in well under a minute — wired into ``make bench-quick``.  ``benchmarks/compare.py`` diffs two such
 JSON drops and is the CI bench-gate.
 
 The DAE sections run with batch-window execution and steady-state
@@ -146,6 +146,21 @@ def _run_sections(args) -> None:
         points=dae_quiescent.QUICK_POINTS if quick else None))
     rows.append(("dae_quiescent", usq,
                  f"win_speedup={qr['speedup']:.2f}x,win_hit={qr['hit']:.3f}"))
+
+    print()
+    print("=" * 72)
+    print("Executable codegen — generated numpy/jax kernels vs interp.run")
+    print("=" * 72)
+    from benchmarks import dae_codegen
+    # quick keeps one jax leg (spmv) so the gate still covers the Pallas
+    # path without paying two interpret-mode compiles
+    cg, uscg = _timed(lambda: dae_codegen.main(
+        jax_benches=("spmv",) if quick else None))
+    nx = min(r["numpy_x"] for r in cg.values())
+    jx = [f"{k}_jax={r['jax_x']:.3f}x" for k, r in cg.items()
+          if "jax_x" in r]
+    rows.append(("dae_codegen", uscg,
+                 ",".join([f"numpy_min={nx:.2f}x"] + jx)))
 
     if not quick:
         # the paper's technique inside the LM framework: MoE dispatch A/B

@@ -1,0 +1,72 @@
+"""Executable codegen demo: from compiled DAE/SPEC slices to real kernels.
+
+    PYTHONPATH=src python examples/dae_codegen_demo.py
+
+Shows the backend's three execution shapes on one workload (spmv):
+
+1. **SPEC + numpy target** — after speculative hoisting the AGU is
+   pure-address (fire-and-forget), so it runs ahead of time as a software
+   prefetcher and the CU executes as a generated coroutine-free NumPy
+   state machine over the (addr, poison) streams.
+2. **SPEC + jax target** — the same streams drive the Pallas kernel layer:
+   ``spec_gather`` serves epoch-batched loads, ``spec_scatter_add``
+   commits stores (poisoned slots are ``-1`` indices, dropped at commit).
+3. **DAE (no speculation)** — the AGU still blocks on sync loads of a
+   stored array (Fig. 1b loss of decoupling), so the stream schedule is
+   illegal and the backend reports an explicit fallback to the coupled
+   untimed interpreter.
+
+Every path is bit-identical to the sequential reference interpreter.
+"""
+import numpy as np
+
+from repro import codegen
+from repro.bench_irregular import ALL
+from repro.core import interp, pipeline
+
+
+def _exact(ref, mem):
+    return all(np.array_equal(ref[k], mem[k]) for k in ref)
+
+
+def main():
+    case = ALL["spmv"](n=12)
+    ref = {k: v.copy() for k, v in case.memory.items()}
+    interp.run(case.fn, ref, case.params)
+
+    spec = pipeline.compile_spec(case.fn, case.decoupled)
+    dae = pipeline.compile_dae(case.fn, case.decoupled)
+
+    print(f"workload: {case.name} ({case.note})")
+    print(f"SPEC AGU class: {codegen.analyze(spec).agu_class}")
+    print(f"DAE  AGU class: {codegen.analyze(dae).agu_class}\n")
+
+    hdr = (f"{'pipeline':8s} {'target':6s} {'ran as':8s} {'commits':>7s} "
+           f"{'poisons':>7s} {'gathers':>7s} {'exact':>6s}")
+    print(hdr)
+    print("-" * len(hdr))
+    runs = [("spec", spec, "numpy"), ("spec", spec, "jax"),
+            ("dae", dae, "numpy")]
+    all_ok = True
+    for pname, comp, target in runs:
+        mem = {k: v.copy() for k, v in case.memory.items()}
+        r = comp.run_generated(mem, case.params, target=target,
+                               interpret=True)
+        ok = _exact(ref, mem)
+        all_ok = all_ok and ok
+        print(f"{pname:8s} {target:6s} {r.target_used:8s} "
+              f"{r.stats['stores_committed']:7d} "
+              f"{r.stats['stores_poisoned']:7d} "
+              f"{r.stats.get('gather_calls', 0):7d} {str(ok):>6s}")
+        if r.fell_back:
+            print(f"         `- fallback: {r.fallback_reason}")
+
+    src = spec.codegen("numpy")
+    n_lines = len(src["cu"].splitlines())
+    print(f"\ngenerated numpy CU state machine: {n_lines} lines "
+          f"(spec.codegen('numpy')['cu'])")
+    print(f"bit-identical to interp: {all_ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.ir import Function
+from ..core.ir import Function, LoopNest
 
 
 def build(n: int = 256, n_bins: int = 32, max_count: int = 1 << 30,
@@ -27,31 +27,18 @@ def build(n: int = 256, n_bins: int = 32, max_count: int = 1 << 30,
     f.array("bins", n)
     f.array("w", n)
 
-    e = f.block("entry")
-    e.const("zero", 0)
-    e.const("one", 1)
-    e.const("N", n)
-    e.const("MAX", max_count)
-    e.br("header")
-    h = f.block("header")
-    h.phi("i", [("entry", "zero"), ("latch", "i_next")])
-    h.bin("c", "<", "i", "N")
-    h.cbr("c", "body", "exit")
-    b = f.block("body")
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(n, "N"))
     b.load("b", "bins", "i")
     b.load("hv", "H", "b")
-    b.bin("p", "<", "hv", "MAX")
-    b.cbr("p", "then", "latch")
+    b.bin("p", "<", "hv", nest.const(max_count, "MAX"))
+    b.cbr("p", "then", nest.latch)
     t = f.block("then")
     t.load("wv", "w", "i")
     t.bin("h1", "+", "hv", "wv")
     t.store("H", "b", "h1")
-    t.br("latch")
-    l = f.block("latch")
-    l.bin("i_next", "+", "i", "one")
-    l.br("header")
-    f.block("exit").ret()
-    f.verify()
+    t.br(nest.latch)
+    nest.finish()
 
     # true_rate controls how often the branch is taken: saturate a fraction
     # of bins at MAX so their updates mis-speculate.

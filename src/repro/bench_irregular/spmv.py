@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.ir import Function
+from ..core.ir import Function, LoopNest
 
 
 def build(n: int = 20, density: float = 0.4, x_zero_rate: float = 0.32,
@@ -32,35 +32,23 @@ def build(n: int = 20, density: float = 0.4, x_zero_rate: float = 0.32,
     f.array("col", nnz)
     f.array("val", nnz)
 
-    e = f.block("entry")
-    e.const("zero", 0)
-    e.const("one", 1)
-    e.const("n", n)
-    e.const("NNZ", nnz)
-    e.br("header")
-    h = f.block("header")
-    h.phi("i", [("entry", "zero"), ("latch", "i_next")])
-    h.bin("c", "<", "i", "NNZ")
-    h.cbr("c", "body", "exit")
-    b = f.block("body")
+    nest = LoopNest(f)
+    n_name = nest.const(n, "n")
+    b = nest.enter("i", nest.const(nnz, "NNZ"))
     b.load("cl", "col", "i")
     b.load("xv", "V", "cl")
     b.bin("p", "!=", "xv", "zero")
-    b.cbr("p", "then", "latch")
+    b.cbr("p", "then", nest.latch)
     t = f.block("then")
     t.load("rw", "row", "i")
-    t.bin("yi", "+", "rw", "n")
+    t.bin("yi", "+", "rw", n_name)
     t.load("yv", "V", "yi")
     t.load("vv", "val", "i")
     t.bin("prod", "*", "vv", "xv")
     t.bin("acc", "+", "yv", "prod")
     t.store("V", "yi", "acc")
-    t.br("latch")
-    l = f.block("latch")
-    l.bin("i_next", "+", "i", "one")
-    l.br("header")
-    f.block("exit").ret()
-    f.verify()
+    t.br(nest.latch)
+    nest.finish()
 
     x = rng.integers(1, 9, n).astype(np.int64)
     x[rng.random(n) < x_zero_rate] = 0

@@ -1,0 +1,150 @@
+"""Executable codegen backend: lower compiled DAE/SPEC slices to kernels.
+
+Until this package existed, ``pipeline.compile_dae``/``compile_spec``
+output could only be *simulated* (:mod:`repro.core.machine`).  The codegen
+backend turns the same :class:`~repro.core.pipeline.CompiledDAE` into
+executable code on two targets:
+
+* ``numpy`` — the AGU slice runs ahead of time as a software prefetcher
+  (:mod:`repro.codegen.streams`), and the CU slice is emitted as a
+  coroutine-free Python/NumPy state machine consuming the precomputed
+  address streams (:mod:`repro.codegen.emit`): sends become stream
+  appends, ``consume_ld`` stream reads, ``produce_st``/``poison_st``
+  masked writes.
+* ``jax`` — the same streams feed the real Pallas kernel layer
+  (:mod:`repro.codegen.jax_backend`): ``spec_gather`` serves epoch-batched
+  load values, ``spec_scatter_add`` commits store batches with poisoned
+  slots as ``-1`` indices (their pad-with-poison path).
+
+When the stream schedule is illegal — a value-dependent AGU (Fig. 1b
+loss of decoupling), an op outside the emitters' subset, or a jax subset
+violation — :func:`run` falls back to the coupled untimed interpreter
+(:mod:`repro.codegen.fallback`), recording the reason; ``strict=True``
+raises instead.  Every path is held bit-identical to
+:func:`repro.core.interp.run` final memory by ``tests/test_codegen.py``
+(all nine table1 kernels + a seeded randprog sweep, DAE and SPEC).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from .analysis import (AGU_PURE, AGU_SYNC_SAFE, AGU_VALUE_DEP, CodegenError,
+                       SliceAnalysis)
+from .analysis import analyze as _analyze_slices
+from .emit import compile_mode, emit_source
+from .streams import Streams
+
+__all__ = ["AGU_PURE", "AGU_SYNC_SAFE", "AGU_VALUE_DEP", "CodegenError",
+           "CodegenRun", "SliceAnalysis", "Streams", "TARGETS", "analyze",
+           "emit_source", "lower", "run"]
+
+TARGETS = ("numpy", "jax")
+
+
+def analyze(compiled) -> SliceAnalysis:
+    """Classify a CompiledDAE for codegen (memoised on the instance)."""
+    info = getattr(compiled, "_codegen_analysis", None)
+    if info is None:
+        info = _analyze_slices(compiled)
+        try:
+            compiled._codegen_analysis = info
+        except AttributeError:
+            pass  # non-dataclass stand-ins in tests may forbid attrs
+    return info
+
+
+@dataclass
+class CodegenRun:
+    """Outcome of one generated-kernel execution."""
+
+    target: str               # what was requested
+    target_used: str          # "numpy" | "jax" | "coupled" (fallback)
+    analysis: SliceAnalysis
+    stats: Dict[str, Any] = field(default_factory=dict)
+    #: why the requested target could not run (None when it did)
+    fallback_reason: Optional[str] = None
+    streams: Optional[Streams] = None
+
+    @property
+    def fell_back(self) -> bool:
+        return self.target_used == "coupled"
+
+
+def lower(compiled, target: str = "numpy") -> Dict[str, Optional[str]]:
+    """Emit (without running) the per-slice sources for ``target``.
+
+    Returns ``{"agu": src, "cu": src}``; an entry is None when that slice
+    does not lower (the run-time equivalent is the coupled fallback).  A
+    value-dependent AGU refuses here too: its emitted text would serve
+    sync loads from an initial-memory snapshot the running CU invalidates
+    — exactly the silently-wrong kernel the backend promises never to
+    hand out.
+    """
+    if target not in TARGETS:
+        raise ValueError(f"unknown codegen target {target!r}")
+    cu_mode = "cu-numpy" if target == "numpy" else "cu-jax"
+    agu_src = (None if analyze(compiled).agu_class == AGU_VALUE_DEP
+               else emit_source(compiled.agu, "agu-stream"))
+    return {"agu": agu_src, "cu": emit_source(compiled.cu, cu_mode)}
+
+
+def run(compiled, memory: Dict[str, np.ndarray],
+        params: Optional[Dict[str, Any]] = None, target: str = "numpy", *,
+        strict: bool = False, interpret: Optional[bool] = None,
+        block_n: int = 8, max_steps: int = 2_000_000) -> CodegenRun:
+    """Execute ``compiled`` against ``memory`` (mutated in place).
+
+    Memory contract matches :func:`repro.core.machine.run_dae`: decoupled
+    arrays end in DU state, the rest in CU state.  ``interpret`` threads
+    through to the Pallas kernels on the jax target (None = backend
+    policy, see :func:`repro.kernels.backend.resolve_interpret`).
+
+    A target that cannot run (see module docstring) falls back to the
+    coupled interpreter unless ``strict=True``, in which case
+    :class:`CodegenError` is raised with ``memory`` untouched.
+    """
+    if target not in TARGETS:
+        raise ValueError(f"unknown codegen target {target!r}")
+    info = analyze(compiled)
+    params = dict(params or {})
+    reason = info.stream_reason
+    streams: Optional[Streams] = None
+    stats: Dict[str, Any] = {}
+    used: Optional[str] = None
+
+    if reason is None:
+        try:
+            agu_make = compile_mode(compiled.agu, "agu-stream")
+            if agu_make is None:
+                raise CodegenError("AGU slice not lowerable")
+            streams = agu_make(memory, dict(params), max_steps)
+            if target == "numpy":
+                cu_make = compile_mode(compiled.cu, "cu-numpy")
+                if cu_make is None:
+                    raise CodegenError("CU slice not lowerable")
+                stats = cu_make(memory, dict(params), streams.ld_clamped,
+                                streams.st_addrs, max_steps)
+            else:
+                from .jax_backend import run_jax
+                stats = run_jax(compiled, memory, params, streams, info,
+                                interpret=interpret, block_n=block_n,
+                                max_steps=max_steps)
+            used = target
+        except CodegenError as e:
+            reason = str(e)
+
+    if used is None:
+        if strict:
+            raise CodegenError(
+                f"codegen target {target!r} unavailable: {reason}")
+        from .fallback import run_coupled
+        decoupled = getattr(compiled, "decoupled", None) or info.decoupled
+        stats = run_coupled(compiled, memory, set(decoupled), params,
+                            max_steps)
+        used = "coupled"
+
+    return CodegenRun(target, used, info, stats,
+                      reason if used == "coupled" else None, streams)

@@ -1,0 +1,134 @@
+"""Slice-structure analysis: which CompiledDAE pairs can run as streams.
+
+The executable backend (``repro.codegen``) runs the AGU slice *ahead of
+time* — the software-prefetcher reading of a decoupled access slice — and
+then replays the CU slice against the precomputed per-array address
+streams.  That two-phase schedule is only legal when the AGU never needs a
+value the CU has yet to produce, so the first thing the backend does is
+classify the AGU:
+
+* **pure-address** (``AGU_PURE``) — no ``sync`` ``send_ld`` at all: every
+  request is fire-and-forget.  This is the paper's post-hoisting Fig. 1c
+  shape (the SPEC pipeline's AGU after ``finalize_agu`` drops the sync
+  flags whose guarding branches died).
+* **sync-read-only** (``AGU_SYNC_SAFE``) — the AGU still blocks on load
+  values (``sync`` sends survive), but only for arrays that receive **no
+  store request anywhere in the AGU**.  The DU would serve those loads
+  straight from initial memory (nothing older can alias), so the
+  ahead-of-time run can too.
+* **value-dependent** (``AGU_VALUE_DEP``) — a sync load targets an array
+  that is also stored.  The load's value may come from a store whose value
+  only the CU knows (the Fig. 1b loss-of-decoupling round trip); the AGU
+  cannot be run ahead and the backend falls back to the coupled untimed
+  interpreter (:mod:`repro.codegen.fallback`).
+
+The op inventory is checked against what the emitters lower
+(:data:`SLICE_OPS`); anything else — including a ``bin`` whose operator the
+shared expression table does not know — is an explicit fallback reason,
+never a silently wrong kernel.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Set
+
+from ..core.ir import Function
+from ..core.sim.compile import _BINOP_EXPR
+
+AGU_PURE = "pure-address"
+AGU_SYNC_SAFE = "sync-read-only"
+AGU_VALUE_DEP = "value-dependent"
+
+#: ops the codegen emitters lower (superset check; per-slice legality —
+#: send ops in the AGU, consume/produce/poison in the CU — is implied by
+#: how :mod:`repro.core.decouple` builds the slices).
+SLICE_OPS = frozenset({
+    "const", "bin", "select", "load", "store", "setreg", "getreg", "print",
+    "send_ld", "send_st", "consume_ld", "produce_st", "poison_st",
+})
+
+
+class CodegenError(RuntimeError):
+    """Raised when a requested lowering cannot be performed (strict mode)
+    or when generated code detects a slice-contract violation at run time."""
+
+
+@dataclass
+class SliceAnalysis:
+    """What the backend learned about one compiled AGU/CU pair."""
+
+    agu_class: str
+    decoupled: Set[str] = field(default_factory=set)
+    #: decoupled arrays with at least one AGU store request
+    stored: Set[str] = field(default_factory=set)
+    #: arrays targeted by surviving sync ``send_ld``s
+    sync_arrays: Set[str] = field(default_factory=set)
+    #: why the stream schedule is impossible (None = streams are legal)
+    stream_reason: Optional[str] = None
+    #: data-LoD mids from the pipeline's LoD analysis, when available —
+    #: the *static* explanation for a value-dependent AGU (Def. 4.1)
+    data_lod_mids: List[int] = field(default_factory=list)
+
+    @property
+    def streamable(self) -> bool:
+        return self.stream_reason is None
+
+
+def _op_check(fn: Function, slice_name: str) -> Optional[str]:
+    for bname, blk in fn.blocks.items():
+        for i in blk.body:
+            if i.op not in SLICE_OPS:
+                return f"{slice_name} op {i.op!r} in {bname} not lowerable"
+            if i.op == "bin" and i.args[0] not in _BINOP_EXPR:
+                return (f"{slice_name} binop {i.args[0]!r} in {bname} "
+                        f"not lowerable")
+    return None
+
+
+def analyze(compiled) -> SliceAnalysis:
+    """Classify a :class:`repro.core.pipeline.CompiledDAE` for codegen."""
+    agu: Function = compiled.agu
+    cu: Function = compiled.cu
+
+    decoupled: Set[str] = set()
+    stored: Set[str] = set()
+    sync_arrays: Set[str] = set()
+    for blk in agu.blocks.values():
+        for i in blk.body:
+            if i.op == "send_ld":
+                decoupled.add(i.array)
+                if i.meta.get("sync"):
+                    sync_arrays.add(i.array)
+            elif i.op == "send_st":
+                decoupled.add(i.array)
+                stored.add(i.array)
+    for blk in cu.blocks.values():
+        for i in blk.body:
+            if i.op in ("consume_ld", "produce_st", "poison_st"):
+                decoupled.add(i.array)
+                if i.op in ("produce_st", "poison_st"):
+                    stored.add(i.array)
+
+    if not sync_arrays:
+        agu_class = AGU_PURE
+    elif sync_arrays & stored:
+        agu_class = AGU_VALUE_DEP
+    else:
+        agu_class = AGU_SYNC_SAFE
+
+    info = SliceAnalysis(agu_class, decoupled, stored, sync_arrays)
+
+    lod = getattr(compiled, "lod", None)
+    if lod is not None:
+        info.data_lod_mids = sorted(lod.data_lod)
+
+    if agu_class == AGU_VALUE_DEP:
+        bad = sorted(sync_arrays & stored)
+        why = (f"AGU is value-dependent: sync load(s) on stored "
+               f"array(s) {', '.join(bad)}")
+        if info.data_lod_mids:
+            why += f" (data-LoD mids {info.data_lod_mids})"
+        info.stream_reason = why
+    else:
+        info.stream_reason = _op_check(agu, "AGU") or _op_check(cu, "CU")
+    return info

@@ -1,0 +1,236 @@
+"""jax target: drive the generated CU through the real Pallas kernel layer.
+
+The decoupled arrays live on device as ``(n, 1)`` int32 tables; the
+generated CU (:func:`repro.codegen.emit.compile_mode` in ``cu-jax`` mode)
+runs as a host-side generator that *yields* an array name whenever its
+load-value buffer runs dry.  On each yield the driver
+
+1. **flushes** every store value the CU has produced for that array —
+   poisoned slots become ``-1`` indices, which is exactly the
+   pad-with-poison path of :func:`repro.kernels.spec_scatter.
+   spec_scatter_add` (dropped at commit, no out-of-bounds write); an
+   overwrite store lowers to gather-current + scatter-add of the delta,
+   which is bit-exact in two's-complement integer arithmetic; write-
+   after-write collisions split the flush so in-order commit is preserved;
+2. **refills** the buffer with the next *epoch* of load values via
+   :func:`repro.kernels.spec_gather.spec_gather`: the epoch extends from
+   the next unconsumed load up to (but excluding) the first load whose raw
+   address aliases a still-unflushed store request — the host-side
+   re-statement of the LSQ's dynamic disambiguation, computable ahead of
+   time because the AGU stream already fixed every address.
+
+Gather/scatter batches are padded to power-of-two buckets (pad indices are
+poison) so the jitted kernels retrace a bounded number of shapes.
+
+Subset rules (anything else raises ``CodegenError`` and the caller falls
+back): decoupled arrays must be integer-typed with all values — initial
+and produced — representable in int32.  Within that range the delta trick
+and the int32 device arithmetic are exact, so final memory is bit-identical
+to the sequential interpreter.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from .analysis import CodegenError
+from .emit import compile_mode
+from .streams import Streams
+
+_I32_MIN, _I32_MAX = -(2 ** 31), 2 ** 31 - 1
+#: largest single gather/scatter batch (bounds jit shape variety and the
+#: interpret-mode grid length); epochs longer than this are split.
+MAX_BATCH = 512
+
+
+def _bucket(n: int) -> int:
+    b = 8
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _check_i32(name: str, arr: np.ndarray) -> None:
+    if arr.dtype.kind not in "iu":
+        raise CodegenError(
+            f"jax target: decoupled array {name} has non-integer dtype "
+            f"{arr.dtype}")
+    if arr.size and (int(arr.min()) < _I32_MIN or int(arr.max()) > _I32_MAX):
+        raise CodegenError(
+            f"jax target: {name} holds values outside int32 range")
+
+
+class _ArrayDriver:
+    """Epoch scheduler for one decoupled array."""
+
+    def __init__(self, name: str, mem: np.ndarray, streams: Streams,
+                 block_n: int, interpret):
+        import jax.numpy as jnp
+        self.name = name
+        self.dtype = mem.dtype
+        self.hi = len(mem) - 1
+        self.table = jnp.asarray(mem.astype(np.int32).reshape(-1, 1))
+        self.ld_clamped = streams.ld_clamped.get(name, [])
+        self.ld_raw = streams.ld_raw.get(name, [])
+        self.ld_pos = streams.ld_pos.get(name, [])
+        self.st_addrs = streams.st_addrs.get(name, [])
+        self.st_pos = streams.st_pos.get(name, [])
+        self.lp = 0          # next unconsumed load index
+        self.fp = 0          # flushed store count
+        self.block_n = block_n
+        self.interpret = interpret
+        self.gather_calls = 0
+        self.scatter_calls = 0
+
+    # -- store flush ---------------------------------------------------------
+    def flush(self, produced: list) -> None:
+        """Apply ``produced`` (values / POISON sentinels) in commit order."""
+        from ..core.sim.base import POISON
+        if not produced:
+            return
+        if self.fp + len(produced) > len(self.st_addrs):
+            raise CodegenError(f"store stream underrun @{self.name}")
+        addrs = self.st_addrs[self.fp:self.fp + len(produced)]
+        idx_b: list = []
+        val_b: list = []
+        seen = set()
+        for a, v in zip(addrs, produced):
+            poison = v is POISON
+            if len(idx_b) >= MAX_BATCH or (not poison and a in seen):
+                self._scatter(idx_b, val_b)
+                idx_b, val_b, seen = [], [], set()
+            if poison:
+                idx_b.append(-1)
+                val_b.append(0)
+                continue
+            if not (0 <= a <= self.hi):
+                raise CodegenError(
+                    f"non-poisoned store out of bounds: {self.name}[{a}]")
+            iv = int(v)
+            if iv < _I32_MIN or iv > _I32_MAX:
+                raise CodegenError(
+                    f"jax target: store value outside int32 range "
+                    f"@{self.name}")
+            seen.add(a)
+            idx_b.append(a)
+            val_b.append(iv)
+        if idx_b:
+            self._scatter(idx_b, val_b)
+        self.fp += len(produced)
+        del produced[:]
+
+    def _scatter(self, idx_list: list, val_list: list) -> None:
+        import jax.numpy as jnp
+        from ..kernels.spec_gather import spec_gather
+        from ..kernels.spec_scatter import spec_scatter_add
+        n = len(idx_list)
+        b = _bucket(n)
+        idx = np.full(b, -1, np.int32)
+        idx[:n] = idx_list
+        vals = np.zeros((b, 1), np.int32)
+        vals[:n, 0] = val_list
+        jidx = jnp.asarray(idx)
+        cur = spec_gather(self.table, jidx, block_d=1, block_n=self.block_n,
+                          interpret=self.interpret)
+        delta = jnp.where(jidx[:, None] >= 0, jnp.asarray(vals) - cur, 0)
+        self.table = spec_scatter_add(self.table, jidx, delta, block_d=1,
+                                      block_n=self.block_n,
+                                      interpret=self.interpret)
+        self.gather_calls += 1
+        self.scatter_calls += 1
+
+    # -- load refill ---------------------------------------------------------
+    def refill(self, buf: deque) -> int:
+        """Gather the next epoch of load values into ``buf``."""
+        import jax.numpy as jnp
+        from ..kernels.spec_gather import spec_gather
+        lds = self.ld_clamped
+        if self.lp >= len(lds):
+            return 0
+        # epoch boundary: stop before the first load whose raw address
+        # aliases an unflushed (>= fp) store request that is older in the
+        # combined stream — its value must come through a flush first
+        take: list = []
+        pend = set()
+        j = self.fp
+        k = self.lp
+        st_pos, st_addrs, ld_pos, ld_raw = (self.st_pos, self.st_addrs,
+                                            self.ld_pos, self.ld_raw)
+        n_st = len(st_addrs)
+        while k < len(lds) and len(take) < MAX_BATCH:
+            p = ld_pos[k]
+            while j < n_st and st_pos[j] < p:
+                pend.add(st_addrs[j])
+                j += 1
+            if ld_raw[k] in pend:
+                break
+            take.append(lds[k])
+            k += 1
+        if not take:
+            return 0
+        n = len(take)
+        b = _bucket(n)
+        idx = np.full(b, -1, np.int32)
+        idx[:n] = take
+        vals = spec_gather(self.table, jnp.asarray(idx), block_d=1,
+                           block_n=self.block_n, interpret=self.interpret)
+        self.gather_calls += 1
+        buf.extend(int(x) for x in np.asarray(vals[:n, 0]))
+        self.lp = k
+        return n
+
+
+def run_jax(compiled, memory: Dict[str, np.ndarray],
+            params: Dict[str, Any], streams: Streams, analysis,
+            *, interpret: Optional[bool] = None, block_n: int = 8,
+            max_steps: int = 2_000_000) -> Dict[str, Any]:
+    """Execute the CU against device tables; mutates ``memory`` on success.
+
+    Raises :class:`CodegenError` (memory untouched) when the run leaves
+    the supported subset — the caller decides whether to fall back.
+    """
+    cu_make = compile_mode(compiled.cu, "cu-jax")
+    if cu_make is None:
+        raise CodegenError("CU slice not lowerable for the jax target")
+
+    dec = sorted(set(streams.arrays) | set(analysis.decoupled))
+    for a in dec:
+        _check_i32(a, memory[a])
+
+    drivers = {a: _ArrayDriver(a, memory[a], streams, block_n, interpret)
+               for a in dec}
+    bufs: Dict[str, deque] = {a: deque() for a in dec}
+    outs: Dict[str, list] = {a: [] for a in dec}
+    stats: Dict[str, Any] = {}
+
+    gen = cu_make(memory, dict(params), bufs, outs, stats, max_steps)
+    while True:
+        try:
+            arr = next(gen)
+        except StopIteration:
+            break
+        drv = drivers[arr]
+        drv.flush(outs[arr])
+        if drv.refill(bufs[arr]) == 0:
+            raise CodegenError(
+                f"jax target: CU blocked on {arr} but no gatherable loads "
+                f"remain (stream mismatch)")
+    for a in dec:  # drain store values produced after the last consume
+        drivers[a].flush(outs[a])
+
+    # every flush succeeded — only now touch the caller's memory (the CU
+    # epilogue deliberately left its local-array mirrors in stats)
+    for a, mirror in stats.pop("locals", {}).items():
+        memory[a][:] = mirror
+    for a in dec:
+        tab = np.asarray(drivers[a].table[:, 0]).astype(memory[a].dtype)
+        memory[a][:] = tab
+    stats["gather_calls"] = sum(d.gather_calls for d in drivers.values())
+    stats["scatter_calls"] = sum(d.scatter_calls for d in drivers.values())
+    stats["ld_leftover"] = sum(len(d.ld_clamped) - d.lp
+                               for d in drivers.values())
+    stats["st_leftover"] = sum(len(d.st_addrs) - d.fp
+                               for d in drivers.values())
+    return stats

@@ -292,3 +292,115 @@ class Function:
         for p in self.blocks[block].phis:
             p.args = tuple((new_pred if blk == old_pred else blk, v)
                            for (blk, v) in p.args)
+
+
+# ---------------------------------------------------------------------------
+# Loop-nest builder
+# ---------------------------------------------------------------------------
+
+
+class LoopNest:
+    """Compact builder for counted loop nests over a :class:`Function`.
+
+    Collapses the entry/header/latch/exit wiring that every benchmark
+    kernel (and every codegen test fixture) would otherwise hand-roll::
+
+        f = Function("hist"); f.array("H", 32)
+        nest = LoopNest(f)                    # opens `entry`, pools 0/1
+        b = nest.enter("i", nest.const(n, "N"))
+        b.load("hv", "H", "i")                # ... loop body ...
+        b.br(nest.latch)                      # paths end at the latch
+        nest.finish()                         # wires cbr/latch/exit, verifies
+
+    * ``const`` pools literals into the entry block (one ``const`` per
+      distinct value, in first-use order — ``zero``/``one`` are pre-pooled
+      for the loop plumbing).
+    * ``enter`` opens a counted loop ``for var in range(bound)``: a header
+      with the ``var`` phi and bound check, a latch with the increment and
+      backedge, and the returned open body block.  Nested ``enter`` calls
+      (from inside a body block) chain automatically: an inner header's
+      exit edge targets the enclosing latch.
+    * The first loop uses the canonical ``header``/``body``/``latch``
+      names; nested loops prefix them with the loop variable.
+    """
+
+    def __init__(self, fn: Function, entry: str = "entry"):
+        self.fn = fn
+        self.entry = fn.block(entry)
+        self._pool: Dict[Any, str] = {}
+        self._stack: List[Dict[str, Any]] = []
+        self._closed: bool = False
+        self.const(0, "zero")
+        self.const(1, "one")
+
+    # -- const pooling -------------------------------------------------------
+    def const(self, value: Any, name: Optional[str] = None) -> str:
+        """Pooled constant: emitted once in the entry block, reused after."""
+        if value in self._pool:
+            return self._pool[value]
+        if name is None:
+            name = f"c{value}".replace("-", "m")
+        if name in self._pool.values():
+            name = self.fn.fresh(name)
+        self.entry.const(name, value)
+        self._pool[value] = name
+        return name
+
+    # -- loops ---------------------------------------------------------------
+    def enter(self, var: str, bound: str,
+              frm: Optional[Block] = None) -> Block:
+        """Open ``for var in range(bound)``; returns the open body block.
+
+        ``frm`` is the block that enters the loop (default: the entry
+        block for the outermost loop, the enclosing body block for nested
+        ones).
+        """
+        if frm is None:
+            frm = self.entry if not self._stack else self._stack[-1]["body"]
+        depth = len(self._stack)
+        pre = "" if depth == 0 else f"{var}_"
+        header = self.fn.block(f"{pre}header")
+        body = self.fn.block(f"{pre}body")
+        # the latch is built now (so body paths can branch to it) but only
+        # *registered* at close(), keeping the block order of the
+        # conventional hand-rolled layout: body blocks first, latch after
+        latch = Block(f"{pre}latch")
+        frm.br(header.name)
+        header.phi(var, [(frm.name, self._pool[0]),
+                         (latch.name, f"{var}_next")])
+        cond = f"{var}_c" if depth else "c"
+        header.bin(cond, "<", var, bound)
+        latch.bin(f"{var}_next", "+", var, self._pool[1])
+        latch.br(header.name)
+        self._stack.append({"var": var, "header": header, "body": body,
+                            "latch": latch, "cond": cond})
+        return body
+
+    @property
+    def latch(self) -> str:
+        """Name of the innermost latch (the branch target for body paths)."""
+        return self._stack[-1]["latch"].name
+
+    def close(self, exit_to: Optional[str] = None) -> None:
+        """Close the innermost loop: wire its header's exit edge to
+        ``exit_to`` (default: the enclosing latch, or ``exit``)."""
+        top = self._stack.pop()
+        if exit_to is None:
+            exit_to = self._stack[-1]["latch"].name if self._stack else "exit"
+        top["header"].cbr(top["cond"], top["body"].name, exit_to)
+        latch = top["latch"]
+        if latch.name in self.fn.blocks:
+            raise ValueError(f"block {latch.name} shadowed before close")
+        self.fn.blocks[latch.name] = latch
+
+    def finish(self, verify: bool = True) -> Function:
+        """Close all open loops, emit the ``exit`` block, and verify."""
+        if self._closed:
+            raise ValueError("LoopNest.finish called twice")
+        while self._stack:
+            self.close()
+        self.fn.block("exit").ret()
+        self._closed = True
+        if verify:
+            self.fn.verify()
+        return self.fn

@@ -35,6 +35,25 @@ class CompiledDAE:
     spec: Optional[spec_mod.SpecResult] = None
     poison_stats: Optional[poison_mod.PoisonStats] = None
     lod: Optional[lod_mod.LoDInfo] = None
+    #: arrays served by a DU/LSQ (recorded so executable backends need not
+    #: re-derive the set from the slices)
+    decoupled: Set[str] = None  # type: ignore[assignment]
+
+    # -- executable codegen hooks (see repro.codegen) -----------------------
+    def codegen(self, target: str = "numpy") -> Dict[str, Optional[str]]:
+        """Emit the per-slice executable sources for ``target``."""
+        from .. import codegen
+        return codegen.lower(self, target)
+
+    def run_generated(self, memory: Dict[str, Any],
+                      params: Optional[Dict[str, Any]] = None,
+                      target: str = "numpy", **kw):
+        """Run the generated kernel for ``target`` against ``memory``
+        (mutated in place); falls back to the coupled interpreter when the
+        target cannot lower this slice pair.  Returns a
+        :class:`repro.codegen.CodegenRun`."""
+        from .. import codegen
+        return codegen.run(self, memory, params, target, **kw)
 
 
 def compile_dae(fn: Function, decoupled: Set[str]) -> CompiledDAE:
@@ -42,7 +61,7 @@ def compile_dae(fn: Function, decoupled: Set[str]) -> CompiledDAE:
     src = fn.clone()
     agu, cu = dec.decouple(src, decoupled)
     info = lod_mod.analyze(src, decoupled)
-    return CompiledDAE(agu, cu, lod=info)
+    return CompiledDAE(agu, cu, lod=info, decoupled=set(decoupled))
 
 
 def compile_spec(fn: Function, decoupled: Set[str]) -> CompiledDAE:
@@ -66,7 +85,8 @@ def compile_spec(fn: Function, decoupled: Set[str]) -> CompiledDAE:
     stats = poison_mod.poison_cu(cu, info.cfg, spec, array_of)
     dec.dce(cu)
     dec.finalize_agu(agu)
-    return CompiledDAE(agu, cu, spec=spec, poison_stats=stats, lod=info)
+    return CompiledDAE(agu, cu, spec=spec, poison_stats=stats, lod=info,
+                       decoupled=set(decoupled))
 
 
 def compile_oracle(fn: Function, decoupled: Set[str]) -> CompiledDAE:

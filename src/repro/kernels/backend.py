@@ -1,11 +1,41 @@
 """Backend policy shared by the Pallas kernels.
 
-One place decides when a kernel defaults to interpret mode, so a future
-change (GPU handling, an env override) applies to every kernel at once.
+One place decides when a kernel runs in interpret mode, so a policy change
+(GPU handling, a new env override) applies to every kernel at once.  The
+resolution order is:
+
+1. an explicit ``interpret=`` kwarg on the kernel call (used by generated
+   codegen kernels and tests to pin the mode per-call, without mutating
+   any global state);
+2. the ``DAE_PALLAS_INTERPRET`` environment variable (``1``/``0``,
+   ``true``/``false`` — a CI-wide pin);
+3. backend auto: compiled Pallas on TPU, interpret mode elsewhere
+   (CPU/GPU CI).
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve the effective interpret flag for one kernel call."""
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get("DAE_PALLAS_INTERPRET", "").strip().lower()
+    if env in _TRUE:
+        return True
+    if env in _FALSE:
+        return False
+    if env:
+        raise ValueError(
+            f"DAE_PALLAS_INTERPRET must be a boolean flag "
+            f"({'/'.join(_TRUE)} or {'/'.join(_FALSE)}), got {env!r}")
+    return default_interpret()
 
 
 def default_interpret() -> bool:

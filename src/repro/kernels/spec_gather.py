@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .backend import default_interpret
+from .backend import resolve_interpret
 
 
 def _kernel(idx_ref, table_ref, out_ref, scratch, sems, *, block_n, block_d):
@@ -54,13 +54,23 @@ def _kernel(idx_ref, table_ref, out_ref, scratch, sems, *, block_n, block_d):
                              scratch[...])
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_d", "block_n", "interpret"))
 def spec_gather(table: jax.Array, idx: jax.Array, *, block_d: int = 512,
                 block_n: int = 8, interpret: bool | None = None) -> jax.Array:
-    """Gather ``table[idx]`` with poisoned (negative) indices zeroed."""
-    if interpret is None:
-        interpret = default_interpret()
+    """Gather ``table[idx]`` with poisoned (negative) indices zeroed.
+
+    ``interpret`` pins the Pallas mode per call (None = backend policy,
+    see :func:`repro.kernels.backend.resolve_interpret`).  Resolution
+    happens *outside* the jitted core so the env knob is read per call,
+    not baked into the first trace.
+    """
+    return _spec_gather(table, idx, block_d=block_d, block_n=block_n,
+                        interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_d", "block_n", "interpret"))
+def _spec_gather(table: jax.Array, idx: jax.Array, *, block_d: int,
+                 block_n: int, interpret: bool) -> jax.Array:
     n = idx.shape[0]
     v, d = table.shape
     bd = min(block_d, d)

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .backend import default_interpret
+from .backend import resolve_interpret
 
 
 def _kernel(idx_ref, vals_ref, table_ref, out_ref, rowbuf, sem, *,
@@ -49,8 +49,6 @@ def _kernel(idx_ref, vals_ref, table_ref, out_ref, rowbuf, sem, *,
         wr.wait()
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_d", "block_n", "interpret"))
 def spec_scatter_add(table: jax.Array, idx: jax.Array, values: jax.Array, *,
                      block_d: int = 512, block_n: int = 8,
                      interpret: bool | None = None) -> jax.Array:
@@ -59,9 +57,22 @@ def spec_scatter_add(table: jax.Array, idx: jax.Array, values: jax.Array, *,
     Requests are destination-sorted inside the wrapper (MoE combines arrive
     expert-contiguous already — the AGU's topological-order discipline,
     §5.1.3 — making the sort a no-op there).
+
+    ``interpret`` pins the Pallas mode per call (None = backend policy,
+    see :func:`repro.kernels.backend.resolve_interpret`).  Resolution
+    happens *outside* the jitted core so the env knob is read per call,
+    not baked into the first trace.
     """
-    if interpret is None:
-        interpret = default_interpret()
+    return _spec_scatter_add(table, idx, values, block_d=block_d,
+                             block_n=block_n,
+                             interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_d", "block_n", "interpret"))
+def _spec_scatter_add(table: jax.Array, idx: jax.Array, values: jax.Array, *,
+                      block_d: int, block_n: int,
+                      interpret: bool) -> jax.Array:
     n = idx.shape[0]
     v, d = table.shape
     bd = min(block_d, d)

@@ -95,11 +95,18 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
         calls["quiescent"] = {"points": points}
         return {"speedup": 3.5, "hit": 0.9, "rows": []}
 
+    def fake_codegen(benches=None, jax_benches=None, **kw):
+        calls["codegen"] = {"benches": benches, "jax_benches": jax_benches}
+        return {"spmv": {"interp_us": 10.0, "numpy_us": 10.0,
+                         "numpy_x": 1.0, "jax_us": 100.0, "jax_x": 0.1}}
+
+    from benchmarks import dae_codegen
     monkeypatch.setattr(dae_table1, "main", fake_table1)
     monkeypatch.setattr(dae_table1, "steady_ab", fake_steady)
     monkeypatch.setattr(dae_table2, "main", fake_table2)
     monkeypatch.setattr(dae_fig7, "main", fake_fig7)
     monkeypatch.setattr(dae_quiescent, "main", fake_quiescent)
+    monkeypatch.setattr(dae_codegen, "main", fake_codegen)
 
     out = tmp_path / "bench.json"
     bench_run.main(["--quick", "--json", str(out)])
@@ -111,10 +118,11 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
     assert calls["table2"]["rates"] == [0.0, 0.6, 1.0]
     assert calls["fig7"]["max_levels"] == 4
     assert calls["quiescent"]["points"] == dae_quiescent.QUICK_POINTS
+    assert calls["codegen"]["jax_benches"] == ("spmv",)  # one jax leg
     rows = json.loads(out.read_text())
     names = [r["name"] for r in rows]
     assert names == ["dae_table1", "dae_steady", "dae_table2", "dae_fig7",
-                     "dae_quiescent"]
+                     "dae_quiescent", "dae_codegen"]
     assert "moe_ab" not in names and "kernel_bench" not in names
 
 
@@ -144,6 +152,11 @@ def test_window_flag_propagates(monkeypatch, tmp_path, capsys):
     monkeypatch.setattr(dae_quiescent, "main",
                         lambda points=None, **kw:
                         {"speedup": 1.0, "hit": 0.0, "rows": []})
+    from benchmarks import dae_codegen
+    monkeypatch.setattr(dae_codegen, "main",
+                        lambda benches=None, jax_benches=None, **kw:
+                        {"spmv": {"interp_us": 1.0, "numpy_us": 1.0,
+                                  "numpy_x": 1.0}})
     bench_run.main(["--quick", "--json", str(tmp_path / "a.json")])
     assert seen["window_env"] == "1"
     assert seen["pipeline_env"] == "1"

@@ -1,0 +1,528 @@
+"""Gate for the executable codegen backend (repro.codegen).
+
+Three layers:
+
+* **golden emission** — the per-target source text for a small fixed IR
+  program is pinned exactly, so emitter changes are deliberate;
+* **differential execution** — generated numpy- and jax-target kernels
+  must produce bit-identical final memory to the sequential interpreter
+  on every table1 kernel and a ``DAE_TEST_SEED``-driven randprog sweep,
+  for both the DAE and SPEC pipelines (ORACLE is wrong by design and
+  excluded);
+* **explicit fallback** — the unsupported paths (value-dependent AGU,
+  non-integer jax arrays, unknown ops) are asserted to fall back loudly
+  (or raise under ``strict=True``) rather than silently mis-execute.
+"""
+import numpy as np
+import pytest
+
+from conftest import dae_test_seed
+from repro import codegen
+from repro.bench_irregular import ALL
+from repro.core import interp, pipeline, randprog
+from repro.core.ir import Function, Instr, LoopNest
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+#: reduced-size builds for the (interpret-mode) jax legs; kernel identity
+#: is what matters for coverage, not the default problem sizes
+SMALL = {
+    "bfs": dict(n_nodes=24, n_edges=64),
+    "bc": dict(n_nodes=20, n_edges=48),
+    "sssp": dict(n_nodes=20, n_edges=56),
+    "hist": dict(n=96),
+    "thr": {},
+    "mm": {},
+    "fw": dict(n=6),
+    "sort": dict(n=16),
+    "spmv": dict(n=12),
+}
+
+COMPILERS = {"dae": pipeline.compile_dae, "spec": pipeline.compile_spec}
+
+
+def _interp_ref(case):
+    ref = {k: v.copy() for k, v in case.memory.items()}
+    interp.run(case.fn, ref, case.params)
+    return ref
+
+
+def _assert_exact(ref, mem, tag):
+    for k in ref:
+        assert np.array_equal(ref[k], mem[k]), f"{tag}: array {k} differs"
+
+
+# ---------------------------------------------------------------------------
+# table1 differential: numpy target
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pname", ["dae", "spec"])
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_table1_numpy_matches_interp(name, pname):
+    case = ALL[name]()
+    comp = COMPILERS[pname](case.fn, case.decoupled)
+    ref = _interp_ref(case)
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    r = codegen.run(comp, mem, case.params, target="numpy")
+    _assert_exact(ref, mem, f"{name}/{pname}/numpy")
+    assert r.stats["ld_leftover"] == 0 and r.stats["st_leftover"] == 0
+    if pname == "spec":
+        # every SPEC AGU is fire-and-forget after hoisting (Fig. 1c):
+        # the stream schedule must have run, not the fallback
+        assert r.target_used == "numpy"
+        assert r.analysis.agu_class == codegen.AGU_PURE
+    else:
+        # every table1 DAE AGU keeps the sync round trip (Fig. 1b):
+        # the backend must take the coupled fallback, explicitly
+        assert r.fell_back
+        assert "value-dependent" in r.fallback_reason
+
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_table1_codegen_matches_machine_counts(name):
+    """Stats cross-check: generated SPEC kernels count the same commits
+    and poisons as the cycle-accurate machine."""
+    from repro.core import machine
+    case = ALL[name]()
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    mmem = {k: v.copy() for k, v in case.memory.items()}
+    mres = machine.run_dae(comp.agu, comp.cu, mmem, case.decoupled,
+                           case.params)
+    cmem = {k: v.copy() for k, v in case.memory.items()}
+    r = codegen.run(comp, cmem, case.params, target="numpy")
+    _assert_exact(mmem, cmem, f"{name}/machine-vs-codegen")
+    assert r.stats["stores_committed"] == mres.stores_committed
+    assert r.stats["stores_poisoned"] == mres.stores_poisoned
+
+
+# ---------------------------------------------------------------------------
+# table1 differential: jax target (through the real Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_table1_jax_matches_interp(name):
+    case = ALL[name](**SMALL[name])
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    ref = _interp_ref(case)
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    # interpret=True pins Pallas interpret mode per call (CI has no TPU);
+    # this is the explicit-kwarg path through kernels/backend.py
+    r = codegen.run(comp, mem, case.params, target="jax", interpret=True)
+    _assert_exact(ref, mem, f"{name}/spec/jax")
+    assert r.target_used == "jax"
+    # the DU really ran on the kernel layer
+    assert r.stats["gather_calls"] > 0
+    assert r.stats["scatter_calls"] > 0
+    assert r.stats["ld_leftover"] == 0 and r.stats["st_leftover"] == 0
+
+
+def test_table1_jax_dae_falls_back_exact():
+    case = ALL["hist"](**SMALL["hist"])
+    comp = pipeline.compile_dae(case.fn, case.decoupled)
+    ref = _interp_ref(case)
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    r = codegen.run(comp, mem, case.params, target="jax", interpret=True)
+    _assert_exact(ref, mem, "hist/dae/jax-fallback")
+    assert r.fell_back and "value-dependent" in r.fallback_reason
+
+
+# ---------------------------------------------------------------------------
+# randprog sweep (32 seeds, both pipelines, both targets)
+# ---------------------------------------------------------------------------
+
+
+def _randprog_cases():
+    base = dae_test_seed()
+    return [base + k for k in range(32)]
+
+
+@pytest.mark.parametrize("target", ["numpy", "jax"])
+def test_randprog_sweep_matches_interp(target):
+    modes = {"numpy": 0, "jax": 0, "coupled": 0}
+    for seed in _randprog_cases():
+        g = randprog.generate(seed % (2 ** 31))
+        for pname, cf in COMPILERS.items():
+            comp = cf(g.fn, g.decoupled)
+            ref = {k: v.copy() for k, v in g.memory.items()}
+            interp.run(g.fn, ref)
+            mem = {k: v.copy() for k, v in g.memory.items()}
+            kw = {"interpret": True} if target == "jax" else {}
+            r = codegen.run(comp, mem, target=target, **kw)
+            modes[r.target_used] += 1
+            _assert_exact(ref, mem, f"randprog{seed}/{pname}/{target}")
+    # the sweep must exercise both the generated path and the fallback
+    assert modes[target] > 0, modes
+    assert modes["coupled"] > 0, modes
+
+
+# ---------------------------------------------------------------------------
+# explicit fallback / strict behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_value_dependent_strict_raises_and_preserves_memory():
+    case = ALL["hist"]()
+    comp = pipeline.compile_dae(case.fn, case.decoupled)
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    with pytest.raises(codegen.CodegenError, match="value-dependent"):
+        codegen.run(comp, mem, case.params, target="numpy", strict=True)
+    _assert_exact(case.memory, mem, "strict-leaves-memory")
+
+
+def _float_case():
+    """Pure-address DAE program over a float64 decoupled array: the numpy
+    target streams it, the jax target refuses the dtype."""
+    f = Function("fprog")
+    f.array("A", 8)
+    f.array("idx", 8)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(8, "N"))
+    b.load("j", "idx", "i")
+    b.load("av", "A", "j")
+    b.bin("v", "+", "av", "one")
+    b.store("A", "i", "v")
+    b.br(nest.latch)
+    nest.finish()
+    rng = np.random.default_rng(7)
+    mem = {"A": rng.random(8).astype(np.float64),
+           "idx": rng.integers(0, 8, 8).astype(np.int64)}
+    return f, mem
+
+
+def test_jax_non_integer_subset_falls_back_numpy_streams():
+    f, mem0 = _float_case()
+    comp = pipeline.compile_spec(f, {"A"})
+    ref = {k: v.copy() for k, v in mem0.items()}
+    interp.run(f, ref)
+
+    mem = {k: v.copy() for k, v in mem0.items()}
+    r = codegen.run(comp, mem, target="numpy")
+    _assert_exact(ref, mem, "float/numpy")
+    assert r.target_used == "numpy"  # floats are fine on the numpy target
+
+    mem = {k: v.copy() for k, v in mem0.items()}
+    r = codegen.run(comp, mem, target="jax", interpret=True)
+    _assert_exact(ref, mem, "float/jax-fallback")
+    assert r.fell_back and "non-integer" in r.fallback_reason
+
+
+def test_jax_range_violation_mid_run_falls_back_clean():
+    """A store value outside int32 is only detectable at flush time, after
+    the CU generator finished and its local-array writes are pending: the
+    failed jax run must leave memory pristine so the coupled fallback
+    still produces the exact result (locals not applied twice)."""
+    f = Function("bigval")
+    f.array("A", 4)
+    f.array("L", 1)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(4, "N"))
+    b.load("lv", "L", "zero")
+    b.bin("l1", "+", "lv", "one")
+    b.store("L", "zero", "l1")          # local read-modify-write
+    b.load("av", "A", "i")
+    b.bin("v", "+", "av", nest.const(1 << 40, "BIG"))
+    b.store("A", "i", "v")              # value fits int64, not int32
+    b.br(nest.latch)
+    nest.finish()
+    mem0 = {"A": np.arange(4, dtype=np.int64), "L": np.zeros(1, np.int64)}
+    comp = pipeline.compile_dae(f, {"A"})
+    ref = {k: v.copy() for k, v in mem0.items()}
+    interp.run(f, ref)
+    mem = {k: v.copy() for k, v in mem0.items()}
+    r = codegen.run(comp, mem, target="jax", interpret=True)
+    _assert_exact(ref, mem, "bigval/jax-fallback")
+    assert r.fell_back and "int32" in r.fallback_reason
+
+
+def test_lower_refuses_value_dependent_agu():
+    case = ALL["hist"]()
+    comp = pipeline.compile_dae(case.fn, case.decoupled)
+    src = codegen.lower(comp, "numpy")
+    assert src["agu"] is None  # would read stale initial-memory snapshots
+    assert src["cu"] is not None
+
+
+def test_unknown_op_refused_loudly():
+    f = Function("weird")
+    f.array("A", 4)
+    e = f.block("entry")
+    e.const("z", 0)
+    e.body.append(Instr("frobnicate", "x", ("z",)))
+    e.store("A", "z", "x")  # keeps the unknown op live through DCE
+    e.ret()
+    f.verify()
+    comp = pipeline.compile_dae(f, set())
+    comp.decoupled = set()
+    info = codegen.analyze(comp)
+    assert not info.streamable and "frobnicate" in info.stream_reason
+    mem = {"A": np.zeros(4, np.int64)}
+    with pytest.raises(codegen.CodegenError):
+        codegen.run(comp, mem, target="numpy", strict=True)
+    # non-strict: the coupled interpreter refuses too — never silent
+    with pytest.raises(codegen.CodegenError, match="frobnicate"):
+        codegen.run(comp, mem, target="numpy")
+
+
+def test_sync_readonly_agu_streams():
+    """A DAE AGU may keep sync loads and still stream, when the sync'd
+    array is never stored (the DU would serve it from initial memory)."""
+    f = Function("syncro")
+    f.array("A", 16)
+    f.array("B", 16)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(16, "N"))
+    b.load("j", "B", "i")       # decoupled load, read-only array
+    b.bin("a", "%", "j", "N")
+    b.load("old", "A", "a")     # decoupled load+store array
+    b.bin("v", "+", "old", "one")
+    b.store("A", "a", "v")
+    b.br(nest.latch)
+    nest.finish()
+    rng = np.random.default_rng(3)
+    mem0 = {"A": rng.integers(0, 50, 16).astype(np.int64),
+            "B": rng.integers(0, 99, 16).astype(np.int64)}
+    comp = pipeline.compile_dae(f, {"A", "B"})
+    ref = {k: v.copy() for k, v in mem0.items()}
+    interp.run(f, ref)
+    mem = {k: v.copy() for k, v in mem0.items()}
+    r = codegen.run(comp, mem, target="numpy")
+    _assert_exact(ref, mem, "sync-readonly")
+    assert r.analysis.agu_class == codegen.AGU_SYNC_SAFE
+    assert r.target_used == "numpy"
+    assert r.streams.sync_reads > 0
+
+
+# ---------------------------------------------------------------------------
+# CompiledDAE hooks + LoopNest builder
+# ---------------------------------------------------------------------------
+
+
+def test_compiled_dae_hooks():
+    case = ALL["spmv"]()
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    assert comp.decoupled == case.decoupled
+    src = comp.codegen("numpy")
+    assert "consume_ld" not in src["cu"]  # lowered away
+    assert "_ldr_" in src["agu"] and "def _run" in src["cu"]
+    ref = _interp_ref(case)
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    r = comp.run_generated(mem, case.params)
+    assert r.target_used == "numpy"
+    _assert_exact(ref, mem, "run_generated")
+
+
+def test_loopnest_matches_handrolled_shape():
+    case = ALL["hist"]()
+    f = case.fn
+    assert list(f.blocks) == ["entry", "header", "body", "then", "latch",
+                              "exit"]
+    assert f.blocks["header"].phis[0].dest == "i"
+    assert f.blocks["latch"].term.targets == ("header",)
+    assert f.blocks["header"].term.targets == ("body", "exit")
+
+
+def test_loopnest_const_pooling():
+    f = Function("pool")
+    f.array("A", 4)
+    nest = LoopNest(f)
+    n = nest.const(4, "N")
+    assert nest.const(4) == n            # pooled by value
+    assert nest.const(0) == "zero" and nest.const(1) == "one"
+    b = nest.enter("i", n)
+    b.store("A", "i", nest.const(7))
+    b.br(nest.latch)
+    nest.finish()
+    consts = [i.args[0] for i in f.blocks["entry"].body if i.op == "const"]
+    assert consts == [0, 1, 4, 7]        # one const per value, in first use
+    mem = {"A": np.zeros(4, np.int64)}
+    interp.run(f, mem)
+    assert (mem["A"] == 7).all()
+
+
+def test_loopnest_nested():
+    f = Function("nested")
+    f.array("A", 12)
+    nest = LoopNest(f)
+    three, four = nest.const(3, "R"), nest.const(4, "C")
+    outer = nest.enter("r", three)
+    inner = nest.enter("j", four, frm=outer)
+    inner.bin("k", "*", "r", four)
+    inner.bin("a", "+", "k", "j")
+    inner.bin("v", "+", "r", "j")
+    inner.store("A", "a", "v")
+    inner.br(nest.latch)
+    nest.finish()
+    mem = {"A": np.zeros(12, np.int64)}
+    interp.run(f, mem)
+    want = np.add.outer(np.arange(3), np.arange(4)).reshape(-1)
+    assert (mem["A"] == want).all()
+
+
+# ---------------------------------------------------------------------------
+# golden emission (exact text per target)
+# ---------------------------------------------------------------------------
+
+
+def _golden_agu():
+    f = Function("g.agu")
+    f.array("A", 8)
+    f.array("B", 8)
+    f.array("idx", 4)
+    e = f.block("entry")
+    e.const("one", 1)
+    e.load("j", "idx", "one")
+    e.body.append(Instr("send_ld", "bv", ("j",), "B", {"sync": True}))
+    e.bin("t", "+", "bv", "one")
+    e.body.append(Instr("send_ld", "av", ("t",), "A", {"sync": False}))
+    e.body.append(Instr("send_st", None, ("j",), "A", {}))
+    e.ret()
+    f.verify()
+    return f
+
+
+def _golden_cu():
+    f = Function("g.cu")
+    f.array("A", 8)
+    f.array("out", 4)
+    e = f.block("entry")
+    e.const("one", 1)
+    e.body.append(Instr("consume_ld", "bv", (), "B", {}))
+    e.body.append(Instr("consume_ld", "av", (), "A", {}))
+    e.bin("s", "+", "av", "bv")
+    e.cbr("s", "take", "skip")
+    t = f.block("take")
+    t.body.append(Instr("produce_st", None, ("s",), "A", {}))
+    t.br("join")
+    s = f.block("skip")
+    s.synthetic = True
+    s.body.append(Instr("poison_st", None, (), "A",
+                        {"poison": True, "pred_reg": "steer.b"}))
+    s.br("join")
+    j = f.block("join")
+    j.phi("o", [("entry", "s"), ("take", "s")])
+    j.store("out", "one", "o")
+    j.ret()
+    f.verify()
+    return f
+
+
+GOLDEN_AGU_STREAM = '''\
+def _run(memory, _params, _max_steps):
+    _regs = {}
+    steps = 0
+    _loc_v0 = memory['idx'].tolist()
+    _cast_v0 = memory['idx'].dtype.type
+    _hi_v0 = len(_loc_v0) - 1
+    _ldr_v1 = []
+    _ldc_v1 = []
+    _ldp_v1 = []
+    _sta_v1 = []
+    _stp_v1 = []
+    _n_v1 = 0
+    _dhi_v1 = len(memory['A']) - 1
+    _ldr_v2 = []
+    _ldc_v2 = []
+    _ldp_v2 = []
+    _sta_v2 = []
+    _stp_v2 = []
+    _n_v2 = 0
+    _dhi_v2 = len(memory['B']) - 1
+    _syncs = 0
+    _base_v2 = memory['B'].tolist()
+    v3 = _params.get('av')
+    v4 = _params.get('bv')
+    v5 = _params.get('j')
+    v6 = _params.get('one')
+    v7 = _params.get('t')
+    _blk = 0
+    _prev = -1
+    while True:
+        if _blk == 0:
+            steps += 6
+            if steps > _max_steps:
+                raise _CodegenError('generated kernel step budget exceeded')
+            v6 = 1
+            _a = int(v6)
+            if _a < 0: _a = 0
+            elif _a > _hi_v0: _a = _hi_v0
+            v5 = _loc_v0[_a]
+            _a = int(v5)
+            _ldr_v2.append(_a)
+            _c = 0 if _a < 0 else (_dhi_v2 if _a > _dhi_v2 else _a)
+            _ldc_v2.append(_c)
+            _ldp_v2.append(_n_v2)
+            _n_v2 += 1
+            v4 = _base_v2[_c]
+            _syncs += 1
+            v7 = (v4 + v6)
+            _a = int(v7)
+            _ldr_v1.append(_a)
+            _c = 0 if _a < 0 else (_dhi_v1 if _a > _dhi_v1 else _a)
+            _ldc_v1.append(_c)
+            _ldp_v1.append(_n_v1)
+            _n_v1 += 1
+            _sta_v1.append(int(v5))
+            _stp_v1.append(_n_v1)
+            _n_v1 += 1
+            return _Streams(ld_raw={'A': _ldr_v1, 'B': _ldr_v2}, \
+ld_clamped={'A': _ldc_v1, 'B': _ldc_v2}, st_addrs={'A': _sta_v1, \
+'B': _sta_v2}, ld_pos={'A': _ldp_v1, 'B': _ldp_v2}, st_pos={'A': _stp_v1, \
+'B': _stp_v2}, sync_reads=_syncs)
+        else:
+            raise RuntimeError(f'codegen: bad block id {_blk}')'''
+
+
+GOLDEN_CU_NUMPY_HEAD = '''\
+def _run(memory, _params, _ld, _st, _max_steps):
+    _regs = {}
+    steps = 0
+    _loc_v0 = memory['out'].tolist()
+    _cast_v0 = memory['out'].dtype.type
+    _hi_v0 = len(_loc_v0) - 1
+    _mem_v1 = memory['A'].tolist()'''
+
+
+GOLDEN_CU_JAX_SNIPPETS = (
+    "yield from ()  # generator even with no consume_ld",
+    "            while not _buf_v2:\n                yield 'B'",
+    "            _out_v1.append(v7)",
+    "                _out_v1.append(_POISON)",
+    "            if _regs.get('steer.b', 0):",
+)
+
+
+def test_golden_agu_stream_emission():
+    assert codegen.emit_source(_golden_agu(), "agu-stream") == \
+        GOLDEN_AGU_STREAM
+
+
+def test_golden_cu_numpy_emission():
+    src = codegen.emit_source(_golden_cu(), "cu-numpy")
+    assert src.startswith(GOLDEN_CU_NUMPY_HEAD)
+    # the poison slot consumes its stream position without writing,
+    # guarded by the steering register
+    assert ("            if _regs.get('steer.b', 0):\n"
+            "                if _sp_v1 >= _stn_v1:\n"
+            "                    raise _CodegenError("
+            "'store stream underrun @A')\n"
+            "                _poisoned += 1\n"
+            "                _sp_v1 += 1") in src
+    # emission is deterministic
+    assert src == codegen.emit_source(_golden_cu(), "cu-numpy")
+
+
+def test_golden_cu_jax_emission():
+    src = codegen.emit_source(_golden_cu(), "cu-jax")
+    for frag in GOLDEN_CU_JAX_SNIPPETS:
+        assert frag in src, frag
+
+
+def test_emission_refuses_wrong_slice_kind():
+    # a CU handed to the AGU emitter (and vice versa) must refuse, not
+    # emit dangling references
+    assert codegen.emit_source(_golden_cu(), "agu-stream") is None
+    assert codegen.emit_source(_golden_agu(), "cu-numpy") is None

@@ -39,3 +39,11 @@ def test_dae_speculation_demo(capsys):
     _run("examples.dae_speculation_demo", ["demo"])
     out = capsys.readouterr().out
     assert "ample capacity" in out
+
+
+def test_dae_codegen_demo(capsys):
+    _run("examples.dae_codegen_demo", ["demo"])
+    out = capsys.readouterr().out
+    assert "bit-identical to interp: True" in out
+    assert "fallback: AGU is value-dependent" in out
+    assert "pure-address" in out
