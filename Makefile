@@ -21,6 +21,11 @@ check test:
 	$(PY) -m pytest -x -q
 
 lint:
+	@$(PY) -m ruff --version >/dev/null 2>&1 || { \
+		echo "error: ruff is not installed in this environment."; \
+		echo "       install the dev extra first:  pip install -e .[dev]"; \
+		echo "       (or just the linter:          pip install ruff)"; \
+		exit 2; }
 	$(PY) -m ruff check .
 
 bench-quick:

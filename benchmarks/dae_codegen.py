@@ -3,13 +3,23 @@
 For each workload the SPEC pipeline is lowered by ``repro.codegen`` and the
 generated kernels are timed against ``interp.run`` on the same memory:
 
-* **numpy target** — AGU stream extraction + the emitted coroutine-free CU
-  state machine (both plain Python; the honest apples-to-apples number);
+* **numpy target** — AGU stream extraction + the emitted CU, in both CU
+  modes: the coroutine-free per-element state machine and the vectorised
+  epoch path (``cu-vector``: iteration-uniform loops as batched array
+  ops);
 * **jax target** — the same streams driven through the real
   ``spec_gather``/``spec_scatter_add`` Pallas kernels (interpret mode on
   CPU CI, so this wall number is a correctness-path cost, not a TPU
   projection; the first call's trace/compile time is excluded by a
   warm-up run).
+
+The **vectorised jax A/B** (``VEC_BENCHES``) runs at the kernels' default
+build sizes: the per-element state machine's kernel-call count grows
+linearly with the request stream while the vectorised path's epoch count
+is roughly constant (mostly-poisoning kernels commit rarely, so the
+optimistic epoch planner almost never cuts), which is where the
+paper-shaped win shows — ``jaxv_x`` records state-machine wall over
+vectorised wall per kernel.
 
 Bit-exactness against the interpreter is asserted before anything is
 timed — a wrong kernel must fail the bench, not post a fast number.
@@ -21,10 +31,17 @@ from typing import Dict, Iterable, Optional
 
 import numpy as np
 
-#: benches and the (small) build kwargs the section runs
+#: benches and the (small) build kwargs the numpy-leg section runs
 BENCHES: Dict[str, dict] = {
     "spmv": dict(n=16),
     "hist": dict(n=128),
+}
+
+#: jax state-machine vs vectorised A/B, at default build sizes
+VEC_BENCHES: Dict[str, dict] = {
+    "bfs": {},
+    "sssp": {},
+    "bc": {},
 }
 
 
@@ -39,6 +56,7 @@ def _best_of(fn, repeats: int = 3) -> float:
 
 def main(benches: Optional[Dict[str, dict]] = None,
          jax_benches: Optional[Iterable[str]] = None,
+         vec_benches: Optional[Dict[str, dict]] = None,
          repeats: int = 3) -> Dict[str, Dict[str, float]]:
     from repro import codegen
     from repro.bench_irregular import ALL
@@ -46,10 +64,12 @@ def main(benches: Optional[Dict[str, dict]] = None,
 
     benches = BENCHES if benches is None else benches
     jax_benches = tuple(benches) if jax_benches is None else tuple(jax_benches)
+    vec_benches = VEC_BENCHES if vec_benches is None else vec_benches
 
     out: Dict[str, Dict[str, float]] = {}
     hdr = (f"{'bench':6s} {'interp us':>10s} {'numpy us':>10s} "
-           f"{'numpy_x':>8s} {'jax us':>10s} {'jax_x':>8s}")
+           f"{'numpy_x':>8s} {'npvec us':>10s} {'npvec_x':>8s} "
+           f"{'jax us':>10s} {'jax_x':>8s}")
     print(hdr)
     print("-" * len(hdr))
     for name, kw in benches.items():
@@ -63,19 +83,26 @@ def main(benches: Optional[Dict[str, dict]] = None,
             interp.run(case.fn, mem, case.params)
             return mem
 
-        def run_target(target):
+        def run_target(target, cu_mode="auto"):
             mem = {k: v.copy() for k, v in case.memory.items()}
-            r = codegen.run(comp, mem, case.params, target=target)
+            r = codegen.run(comp, mem, case.params, target=target,
+                            cu_mode=cu_mode)
             return mem, r
 
-        # correctness gate before any timing
-        mem, r = run_target("numpy")
-        assert r.target_used == "numpy", r.fallback_reason
-        assert all(np.array_equal(ref[k], mem[k]) for k in ref), name
+        # correctness gate before any timing: both CU modes, bit-exact
+        for cu_mode in ("state-machine", "vector"):
+            mem, r = run_target("numpy", cu_mode)
+            assert r.target_used == "numpy", r.fallback_reason
+            assert r.cu_mode == cu_mode, (r.cu_mode, r.vector_reason)
+            assert all(np.array_equal(ref[k], mem[k]) for k in ref), name
 
         row = {"interp_us": _best_of(run_interp, repeats),
-               "numpy_us": _best_of(lambda: run_target("numpy"), repeats)}
+               "numpy_us": _best_of(
+                   lambda: run_target("numpy", "state-machine"), repeats),
+               "npvec_us": _best_of(
+                   lambda: run_target("numpy", "vector"), repeats)}
         row["numpy_x"] = row["interp_us"] / row["numpy_us"]
+        row["npvec_x"] = row["interp_us"] / row["npvec_us"]
 
         if name in jax_benches:
             mem, r = run_target("jax")
@@ -88,7 +115,46 @@ def main(benches: Optional[Dict[str, dict]] = None,
         jx = (f"{row['jax_us']:10.0f} {row['jax_x']:7.3f}x"
               if "jax_us" in row else f"{'-':>10s} {'-':>8s}")
         print(f"{name:6s} {row['interp_us']:10.0f} {row['numpy_us']:10.0f} "
-              f"{row['numpy_x']:7.2f}x {jx}")
+              f"{row['numpy_x']:7.2f}x {row['npvec_us']:10.0f} "
+              f"{row['npvec_x']:7.2f}x {jx}")
+
+    if vec_benches:
+        hdr = (f"{'bench':6s} {'jax-sm us':>10s} {'jax-vec us':>10s} "
+               f"{'jaxv_x':>7s} {'calls':>9s}")
+        print()
+        print("vectorised jax A/B (state-machine vs cu-vector, "
+              "default sizes)")
+        print(hdr)
+        print("-" * len(hdr))
+    for name, kw in vec_benches.items():
+        case = ALL[name](**kw)
+        comp = pipeline.compile_spec(case.fn, case.decoupled)
+        ref = {k: v.copy() for k, v in case.memory.items()}
+        interp.run(case.fn, ref, case.params)
+
+        def run_jax(cu_mode):
+            mem = {k: v.copy() for k, v in case.memory.items()}
+            r = codegen.run(comp, mem, case.params, target="jax",
+                            cu_mode=cu_mode)
+            return mem, r
+
+        calls = {}
+        for cu_mode in ("state-machine", "vector"):  # warm-up + gate
+            mem, r = run_jax(cu_mode)
+            assert r.target_used == "jax", r.fallback_reason
+            assert r.cu_mode == cu_mode, (r.cu_mode, r.vector_reason)
+            assert all(np.array_equal(ref[k], mem[k]) for k in ref), name
+            calls[cu_mode] = (r.stats["gather_calls"]
+                              + r.stats["scatter_calls"])
+
+        row = out.setdefault(name, {})
+        row["jaxsm_us"] = _best_of(
+            lambda: run_jax("state-machine"), repeats)
+        row["jaxvec_us"] = _best_of(lambda: run_jax("vector"), repeats)
+        row["jaxv_x"] = row["jaxsm_us"] / row["jaxvec_us"]
+        print(f"{name:6s} {row['jaxsm_us']:10.0f} {row['jaxvec_us']:10.0f} "
+              f"{row['jaxv_x']:6.1f}x {calls['state-machine']:4d}->"
+              f"{calls['vector']:<4d}")
     return out
 
 

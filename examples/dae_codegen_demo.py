@@ -41,20 +41,23 @@ def main():
     print(f"SPEC AGU class: {codegen.analyze(spec).agu_class}")
     print(f"DAE  AGU class: {codegen.analyze(dae).agu_class}\n")
 
-    hdr = (f"{'pipeline':8s} {'target':6s} {'ran as':8s} {'commits':>7s} "
-           f"{'poisons':>7s} {'gathers':>7s} {'exact':>6s}")
+    hdr = (f"{'pipeline':8s} {'target':6s} {'ran as':8s} {'cu mode':13s} "
+           f"{'commits':>7s} {'poisons':>7s} {'gathers':>7s} {'exact':>6s}")
     print(hdr)
     print("-" * len(hdr))
-    runs = [("spec", spec, "numpy"), ("spec", spec, "jax"),
-            ("dae", dae, "numpy")]
+    runs = [("spec", spec, "numpy", "state-machine"),
+            ("spec", spec, "numpy", "vector"),
+            ("spec", spec, "jax", "auto"),
+            ("dae", dae, "numpy", "auto")]
     all_ok = True
-    for pname, comp, target in runs:
+    for pname, comp, target, cu_mode in runs:
         mem = {k: v.copy() for k, v in case.memory.items()}
         r = comp.run_generated(mem, case.params, target=target,
-                               interpret=True)
+                               interpret=True, cu_mode=cu_mode)
         ok = _exact(ref, mem)
         all_ok = all_ok and ok
         print(f"{pname:8s} {target:6s} {r.target_used:8s} "
+              f"{r.cu_mode or '-':13s} "
               f"{r.stats['stores_committed']:7d} "
               f"{r.stats['stores_poisoned']:7d} "
               f"{r.stats.get('gather_calls', 0):7d} {str(ok):>6s}")
@@ -63,8 +66,10 @@ def main():
 
     src = spec.codegen("numpy")
     n_lines = len(src["cu"].splitlines())
+    n_vec = len(src["cu_vector"].splitlines())
     print(f"\ngenerated numpy CU state machine: {n_lines} lines "
-          f"(spec.codegen('numpy')['cu'])")
+          f"(spec.codegen('numpy')['cu']); vectorised CU: {n_vec} lines "
+          f"('cu_vector' — epoch-batched, one gather/scatter per epoch)")
     print(f"bit-identical to interp: {all_ok}")
 
 

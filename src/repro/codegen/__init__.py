@@ -16,6 +16,23 @@ executable code on two targets:
   load values, ``spec_scatter_add`` commits store batches with poisoned
   slots as ``-1`` indices (their pad-with-poison path).
 
+On either target the CU half has two execution modes (``cu_mode``,
+default ``"auto"``): when :mod:`repro.codegen.analysis` proves the CU
+**iteration-uniform** (straight-line per-iteration dataflow after
+if-conversion — the post-speculation SPEC shape), the *vectorised* path
+(:mod:`repro.codegen.vector`, emission mode ``cu-vector``) runs whole
+epochs of iterations as batched array ops with poison as a mask lane:
+one gather and at most one WAW-resolved scatter per array per epoch,
+planned optimistically by the shared epoch scheduler
+(:mod:`repro.codegen.epochs`) and cut exactly at the first committed RAW
+hazard.  ``auto`` vectorises the jax target (whose wall time is
+per-kernel-call dominated — epochs amortise it) and keeps the state
+machine on the numpy target (compiled per-element Python is already
+cheaper than epoch-batched numpy dispatch at bench sizes).  Non-uniform
+CUs (steered poison groups, loop-carried values, dynamic slot counts)
+keep the per-element state machine, with the reason recorded on
+:class:`CodegenRun.vector_reason`.
+
 When the stream schedule is illegal — a value-dependent AGU (Fig. 1b
 loss of decoupling), an op outside the emitters' subset, or a jax subset
 violation — :func:`run` falls back to the coupled untimed interpreter
@@ -32,27 +49,40 @@ from typing import Any, Dict, Optional
 import numpy as np
 
 from .analysis import (AGU_PURE, AGU_SYNC_SAFE, AGU_VALUE_DEP, CodegenError,
-                       SliceAnalysis)
+                       SliceAnalysis, UniformLoop)
 from .analysis import analyze as _analyze_slices
 from .emit import compile_mode, emit_source
 from .streams import Streams
 
-__all__ = ["AGU_PURE", "AGU_SYNC_SAFE", "AGU_VALUE_DEP", "CodegenError",
-           "CodegenRun", "SliceAnalysis", "Streams", "TARGETS", "analyze",
-           "emit_source", "lower", "run"]
+__all__ = ["AGU_PURE", "AGU_SYNC_SAFE", "AGU_VALUE_DEP", "CU_MODES",
+           "CodegenError", "CodegenRun", "SliceAnalysis", "Streams",
+           "TARGETS", "UniformLoop", "analyze", "emit_source", "lower",
+           "run"]
 
 TARGETS = ("numpy", "jax")
+#: how the CU half may execute: epoch-batched array ops for
+#: iteration-uniform SPEC shapes, or the per-element state machine
+CU_MODES = ("auto", "vector", "state-machine")
 
 
 def analyze(compiled) -> SliceAnalysis:
-    """Classify a CompiledDAE for codegen (memoised on the instance)."""
-    info = getattr(compiled, "_codegen_analysis", None)
-    if info is None:
-        info = _analyze_slices(compiled)
-        try:
-            compiled._codegen_analysis = info
-        except AttributeError:
-            pass  # non-dataclass stand-ins in tests may forbid attrs
+    """Classify a CompiledDAE for codegen (memoised on the instance).
+
+    The memo is keyed on the *identity of the slices*, not just the
+    CompiledDAE object: a pipeline that rewrites ``compiled.agu`` or
+    ``compiled.cu`` in place (re-decoupling, vectoriser experiments)
+    gets a fresh classification instead of a stale cached one.
+    """
+    memo = getattr(compiled, "_codegen_analysis", None)
+    if memo is not None:
+        agu, cu, info = memo
+        if agu is compiled.agu and cu is compiled.cu:
+            return info
+    info = _analyze_slices(compiled)
+    try:
+        compiled._codegen_analysis = (compiled.agu, compiled.cu, info)
+    except AttributeError:
+        pass  # non-dataclass stand-ins in tests may forbid attrs
     return info
 
 
@@ -67,6 +97,11 @@ class CodegenRun:
     #: why the requested target could not run (None when it did)
     fallback_reason: Optional[str] = None
     streams: Optional[Streams] = None
+    #: how the CU executed: "vector" | "state-machine" | None (coupled)
+    cu_mode: Optional[str] = None
+    #: why the vectorised CU did not run (None when it did, or when the
+    #: whole target fell back before the CU mode was chosen)
+    vector_reason: Optional[str] = None
 
     @property
     def fell_back(self) -> bool:
@@ -76,25 +111,28 @@ class CodegenRun:
 def lower(compiled, target: str = "numpy") -> Dict[str, Optional[str]]:
     """Emit (without running) the per-slice sources for ``target``.
 
-    Returns ``{"agu": src, "cu": src}``; an entry is None when that slice
-    does not lower (the run-time equivalent is the coupled fallback).  A
-    value-dependent AGU refuses here too: its emitted text would serve
-    sync loads from an initial-memory snapshot the running CU invalidates
-    — exactly the silently-wrong kernel the backend promises never to
-    hand out.
+    Returns ``{"agu": src, "cu": src, "cu_vector": src}``; an entry is
+    None when that slice does not lower (the run-time equivalent is the
+    coupled fallback — or, for ``cu_vector``, the per-element ``cu``
+    state machine).  A value-dependent AGU refuses here too: its emitted
+    text would serve sync loads from an initial-memory snapshot the
+    running CU invalidates — exactly the silently-wrong kernel the
+    backend promises never to hand out.
     """
     if target not in TARGETS:
         raise ValueError(f"unknown codegen target {target!r}")
     cu_mode = "cu-numpy" if target == "numpy" else "cu-jax"
     agu_src = (None if analyze(compiled).agu_class == AGU_VALUE_DEP
                else emit_source(compiled.agu, "agu-stream"))
-    return {"agu": agu_src, "cu": emit_source(compiled.cu, cu_mode)}
+    return {"agu": agu_src, "cu": emit_source(compiled.cu, cu_mode),
+            "cu_vector": emit_source(compiled.cu, "cu-vector")}
 
 
 def run(compiled, memory: Dict[str, np.ndarray],
         params: Optional[Dict[str, Any]] = None, target: str = "numpy", *,
         strict: bool = False, interpret: Optional[bool] = None,
-        block_n: int = 8, max_steps: int = 2_000_000) -> CodegenRun:
+        block_n: int = 8, cu_mode: str = "auto",
+        max_steps: int = 2_000_000) -> CodegenRun:
     """Execute ``compiled`` against ``memory`` (mutated in place).
 
     Memory contract matches :func:`repro.core.machine.run_dae`: decoupled
@@ -102,18 +140,35 @@ def run(compiled, memory: Dict[str, np.ndarray],
     through to the Pallas kernels on the jax target (None = backend
     policy, see :func:`repro.kernels.backend.resolve_interpret`).
 
+    ``cu_mode`` picks how the CU half runs once the stream schedule is
+    legal: ``"auto"`` resolves per target — the jax target takes the
+    vectorised epoch path when the CU is iteration-uniform (its wall
+    time is dominated by per-request kernel calls, which epochs
+    amortise) and drops to the per-element state machine otherwise (the
+    reason lands in ``CodegenRun.vector_reason``); the numpy target
+    keeps the state machine, whose per-element compiled-Python cost
+    already beats epoch-batched numpy dispatch at bench sizes (pin
+    ``cu_mode="vector"`` for wide-epoch workloads).  ``"vector"`` /
+    ``"state-machine"`` pin one path on either target (a pinned vector
+    request that cannot run falls back to the coupled interpreter like
+    any other refusal).
+
     A target that cannot run (see module docstring) falls back to the
     coupled interpreter unless ``strict=True``, in which case
     :class:`CodegenError` is raised with ``memory`` untouched.
     """
     if target not in TARGETS:
         raise ValueError(f"unknown codegen target {target!r}")
+    if cu_mode not in CU_MODES:
+        raise ValueError(f"unknown cu_mode {cu_mode!r}")
     info = analyze(compiled)
     params = dict(params or {})
     reason = info.stream_reason
     streams: Optional[Streams] = None
     stats: Dict[str, Any] = {}
     used: Optional[str] = None
+    used_cu: Optional[str] = None
+    vector_reason: Optional[str] = None
 
     if reason is None:
         try:
@@ -121,20 +176,37 @@ def run(compiled, memory: Dict[str, np.ndarray],
             if agu_make is None:
                 raise CodegenError("AGU slice not lowerable")
             streams = agu_make(memory, dict(params), max_steps)
-            if target == "numpy":
-                cu_make = compile_mode(compiled.cu, "cu-numpy")
-                if cu_make is None:
-                    raise CodegenError("CU slice not lowerable")
-                stats = cu_make(memory, dict(params), streams.ld_clamped,
-                                streams.st_addrs, max_steps)
-            else:
-                from .jax_backend import run_jax
-                stats = run_jax(compiled, memory, params, streams, info,
-                                interpret=interpret, block_n=block_n,
-                                max_steps=max_steps)
-            used = target
+
+            want_vector = (cu_mode == "vector"
+                           or (cu_mode == "auto" and target == "jax"))
+            if want_vector:
+                from .vector import run_vector
+                try:
+                    stats = run_vector(compiled, memory, params, streams,
+                                       info, target, interpret=interpret,
+                                       block_n=block_n, max_steps=max_steps)
+                    used, used_cu = target, "vector"
+                except CodegenError as e:
+                    if cu_mode == "vector":
+                        raise
+                    vector_reason = str(e)  # fall through to state machine
+
+            if used is None:
+                if target == "numpy":
+                    cu_make = compile_mode(compiled.cu, "cu-numpy")
+                    if cu_make is None:
+                        raise CodegenError("CU slice not lowerable")
+                    stats = cu_make(memory, dict(params), streams.ld_clamped,
+                                    streams.st_addrs, max_steps)
+                else:
+                    from .jax_backend import run_jax
+                    stats = run_jax(compiled, memory, params, streams, info,
+                                    interpret=interpret, block_n=block_n,
+                                    max_steps=max_steps)
+                used, used_cu = target, "state-machine"
         except CodegenError as e:
             reason = str(e)
+            used = used_cu = None
 
     if used is None:
         if strict:
@@ -147,4 +219,5 @@ def run(compiled, memory: Dict[str, np.ndarray],
         used = "coupled"
 
     return CodegenRun(target, used, info, stats,
-                      reason if used == "coupled" else None, streams)
+                      reason if used == "coupled" else None, streams,
+                      used_cu, vector_reason)

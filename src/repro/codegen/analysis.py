@@ -30,7 +30,7 @@ never a silently wrong kernel.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Set
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 from ..core.ir import Function
 from ..core.sim.compile import _BINOP_EXPR
@@ -54,6 +54,29 @@ class CodegenError(RuntimeError):
 
 
 @dataclass
+class UniformLoop:
+    """One innermost CU loop proven iteration-uniform (vectorisable).
+
+    After if-conversion the loop body is straight-line: every iteration
+    consumes exactly ``k_loads[a]`` load values and exactly ``k_stores[a]``
+    store slots per decoupled array ``a``, in the same per-array order, so
+    a whole epoch of iterations runs as batched array ops with poison as
+    a mask (see ``repro.codegen.emit`` mode ``cu-vector``).
+    """
+
+    header: str
+    body: str                    # taken target of the header's bound test
+    latch: str                   # sole in-loop predecessor of the header
+    exit: str                    # fall-through target of the bound test
+    iv: str                      # induction phi dest (unit stride)
+    bound: Any                   # name or literal of the ``iv < bound`` test
+    blocks: List[str]            # region (body..latch) in topological order
+    k_loads: Dict[str, int] = field(default_factory=dict)
+    k_stores: Dict[str, int] = field(default_factory=dict)
+    n_ops: int = 0               # per-iteration op count (step accounting)
+
+
+@dataclass
 class SliceAnalysis:
     """What the backend learned about one compiled AGU/CU pair."""
 
@@ -68,10 +91,18 @@ class SliceAnalysis:
     #: data-LoD mids from the pipeline's LoD analysis, when available —
     #: the *static* explanation for a value-dependent AGU (Def. 4.1)
     data_lod_mids: List[int] = field(default_factory=list)
+    #: iteration-uniform innermost CU loops (None when the CU cannot take
+    #: the vectorised path; ``uniform_reason`` says why)
+    uniform_loops: Optional[List[UniformLoop]] = None
+    uniform_reason: Optional[str] = None
 
     @property
     def streamable(self) -> bool:
         return self.stream_reason is None
+
+    @property
+    def vectorizable(self) -> bool:
+        return self.uniform_loops is not None
 
 
 def _op_check(fn: Function, slice_name: str) -> Optional[str]:
@@ -131,4 +162,296 @@ def analyze(compiled) -> SliceAnalysis:
         info.stream_reason = why
     else:
         info.stream_reason = _op_check(agu, "AGU") or _op_check(cu, "CU")
+
+    info.uniform_loops, info.uniform_reason = uniform_loops(cu)
     return info
+
+
+# ---------------------------------------------------------------------------
+# Iteration-uniformity: which CU loops can run as vectorised epochs
+# ---------------------------------------------------------------------------
+
+_DAE_CU_OPS = ("consume_ld", "produce_st", "poison_st")
+
+#: ops the vector emitter lowers to batched expressions.  ``setreg``/
+#: ``getreg`` (the steering-flag web of predicated poison groups) are
+#: deliberately absent: a ``pred_reg``-guarded ``poison_st`` consumes its
+#: store slot only when the flag is set, so the per-iteration slot count
+#: is dynamic — the definition of non-uniform.
+_VECTOR_OPS = frozenset({"const", "bin", "select", "load", "store",
+                         "consume_ld", "produce_st", "poison_st", "print"})
+
+
+def uniform_loops(fn: Function
+                  ) -> Tuple[Optional[List[UniformLoop]], Optional[str]]:
+    """Classify ``fn``'s innermost loops for vectorised epoch execution.
+
+    Returns ``(loops, None)`` when every DAE op of the CU sits inside an
+    iteration-uniform innermost loop (``loops`` may be empty for a CU with
+    no loops at all — the scalar sections then carry no DAE ops either),
+    or ``(None, reason)`` naming the first disqualifier.  Memoised on the
+    Function (same no-mutation contract as the emitters).
+    """
+    try:
+        return fn._codegen_uniform  # type: ignore[attr-defined]
+    except AttributeError:
+        pass
+    res = _uniform_loops(fn)
+    fn._codegen_uniform = res  # type: ignore[attr-defined]
+    return res
+
+
+def _uniform_loops(fn: Function):
+    from ..core.cfg import CFGInfo
+    try:
+        cfg = CFGInfo(fn)
+    except ValueError as e:
+        return None, f"CFG not analyzable: {e}"
+
+    inner = [h for h in cfg.loops
+             if not any(h2 != h and h2 in cfg.loops[h] for h2 in cfg.loops)]
+    inner.sort(key=list(fn.blocks).index)
+
+    covered: Set[str] = set()
+    loops: List[UniformLoop] = []
+    for h in inner:
+        ul, why = _classify_loop(fn, cfg, h)
+        region_dae = any(i.op in _DAE_CU_OPS
+                         for b in cfg.loops[h] if b != h
+                         for i in fn.blocks[b].body)
+        if ul is None:
+            if region_dae:
+                return None, f"loop {h}: {why}"
+            continue  # DAE-free loop that fails the shape checks: scalar
+        loops.append(ul)
+        covered.update(ul.blocks)
+        covered.add(h)
+
+    for bname, blk in fn.blocks.items():
+        if bname in covered:
+            continue
+        for i in blk.body:
+            if i.op in _DAE_CU_OPS:
+                return None, (f"DAE op {i.op!r} in {bname} outside any "
+                              f"iteration-uniform innermost loop")
+    return loops, None
+
+
+def _classify_loop(fn: Function, cfg, h: str):
+    """One innermost loop -> (UniformLoop, None) or (None, reason)."""
+    body_set = cfg.loops[h]
+    hb = fn.blocks[h]
+
+    # -- canonical counted-loop shape (the LoopNest contract) ---------------
+    latches = [p for p, blk in fn.blocks.items()
+               if p in body_set and h in blk.term.succs() and p != h]
+    if len(latches) != 1:
+        return None, "multiple latches"
+    latch = latches[0]
+    if len(hb.phis) != 1:
+        return None, "header carries a non-induction loop phi"
+    phi = hb.phis[0]
+    iv = phi.dest
+    nxt = None
+    for (pb, v) in phi.args:
+        if pb == latch:
+            nxt = v
+    if nxt is None:
+        return None, "induction phi has no latch incoming"
+    if any(i.op in _DAE_CU_OPS for i in hb.body):
+        return None, "DAE op in loop header"
+    if len(hb.body) != 1 or hb.body[0].op != "bin" \
+            or hb.body[0].args[0] != "<":
+        return None, "header is not a single `iv < bound` test"
+    cond = hb.body[0].dest
+    if hb.body[0].args[1] != iv:
+        return None, "bound test does not compare the induction phi"
+    bound = hb.body[0].args[2]
+    if hb.term.kind != "cbr" or hb.term.cond != cond:
+        return None, "header terminator is not the bound test"
+    body_t, exit_t = hb.term.targets
+    if body_t not in body_set or exit_t in body_set:
+        return None, "bound test targets are not (body, exit)"
+
+    region = [b for b in body_set if b != h]
+    region_set = set(region)
+
+    # -- region must be a DAG of plain blocks ending at the latch -----------
+    for b in region:
+        blk = fn.blocks[b]
+        if blk.phis:
+            return None, f"join phi in loop block {b}"
+        if blk.term.kind == "ret":
+            return None, f"loop block {b} returns"
+        for t in blk.term.succs():
+            if t not in region_set and t != h:
+                return None, f"loop block {b} exits the loop mid-iteration"
+        if h in blk.term.succs() and b != latch:
+            return None, "multiple backedge sources"
+
+    order = _topo(fn, region_set, body_t)
+    if order is None or len(order) != len(region_set):
+        return None, "loop body is not an acyclic single-entry region"
+
+    # -- op inventory, unit-stride induction, def/use discipline ------------
+    defs: Dict[str, str] = {}
+    n_ops = 0
+    loaded: Set[str] = set()
+    stored_sites: Dict[str, int] = {}
+    for b in order:
+        for i in fn.blocks[b].body:
+            n_ops += 1
+            if i.op not in _VECTOR_OPS:
+                return None, f"op {i.op!r} in {b} not vectorisable"
+            if i.op == "bin" and i.args[0] not in _BINOP_EXPR:
+                return None, f"binop {i.args[0]!r} in {b} not vectorisable"
+            if i.op == "poison_st" and i.meta.get("pred_reg"):
+                return None, f"steered poison in {b} (dynamic slot count)"
+            if i.op == "load":
+                loaded.add(i.array)
+            elif i.op == "store":
+                stored_sites[i.array] = stored_sites.get(i.array, 0) + 1
+            if i.dest is not None:
+                if i.dest in defs:
+                    return None, f"{i.dest} multiply defined in loop body"
+                defs[i.dest] = b
+    if iv in defs or (isinstance(bound, str) and bound in defs):
+        return None, "loop body redefines the induction variable or bound"
+    bad_local = sorted(set(stored_sites) & loaded)
+    if bad_local:
+        return None, (f"local array {bad_local[0]} both loaded and stored "
+                      f"in the loop (cross-iteration dependence)")
+    multi = sorted(a for a, n in stored_sites.items() if n > 1)
+    if multi:
+        return None, (f"local array {multi[0]} stored at multiple sites "
+                      f"(in-epoch write order not reconstructible)")
+    if not _unit_increment(fn, region_set, nxt, iv):
+        return None, "induction step is not `iv + 1`"
+    leak = _region_use_outside(fn, region_set, set(defs), {nxt, cond})
+    if leak:
+        return None, f"loop value {leak} used outside the loop body"
+    if _used_elsewhere(fn, cond, h):
+        return None, "bound test value used beyond the header"
+
+    # -- uniform request counts: forward DP over the region DAG -------------
+    k_loads, k_stores, why = _slot_dp(fn, region_set, order, body_t, latch)
+    if why is not None:
+        return None, why
+
+    return UniformLoop(h, body_t, latch, exit_t, iv, bound, order,
+                       k_loads, k_stores, n_ops), None
+
+
+def _topo(fn: Function, region: Set[str], entry: str) -> Optional[List[str]]:
+    blk_ix = {b: i for i, b in enumerate(fn.blocks)}
+    indeg = {b: 0 for b in region}
+    for b in region:
+        for t in fn.blocks[b].term.succs():
+            if t in region:
+                indeg[t] += 1
+    if entry not in region or indeg[entry] != 0:
+        return None
+    ready = [entry]
+    out: List[str] = []
+    while ready:
+        ready.sort(key=blk_ix.get)  # deterministic emission order
+        b = ready.pop(0)
+        out.append(b)
+        for t in fn.blocks[b].term.succs():
+            if t in region:
+                indeg[t] -= 1
+                if indeg[t] == 0:
+                    ready.append(t)
+    return out if len(out) == len(region) else None
+
+
+def _unit_increment(fn: Function, region: Set[str], nxt: str,
+                    iv: str) -> bool:
+    for b in region:
+        for i in fn.blocks[b].body:
+            if i.dest == nxt:
+                if i.op != "bin" or i.args[0] != "+":
+                    return False
+                other = (i.args[2] if i.args[1] == iv
+                         else i.args[1] if i.args[2] == iv else None)
+                if other is None:
+                    return False
+                return other == 1 or _is_const_one(fn, other)
+    return False
+
+
+def _is_const_one(fn: Function, name) -> bool:
+    if not isinstance(name, str):
+        return False
+    for blk in fn.blocks.values():
+        for i in blk.body:
+            if i.dest == name:
+                return i.op == "const" and i.args[0] == 1
+    return False
+
+
+def _region_use_outside(fn: Function, region: Set[str], defs: Set[str],
+                        allowed: Set[str]) -> Optional[str]:
+    watch = defs - allowed
+    if not watch:
+        return None
+    for bname, blk in fn.blocks.items():
+        if bname in region:
+            continue
+        for p in blk.phis:
+            for v in (x for (_, x) in p.args):
+                if v in watch:
+                    return v
+        for i in blk.body:
+            for u in i.uses():
+                if u in watch:
+                    return u
+        if blk.term.kind == "cbr" and blk.term.cond in watch:
+            return blk.term.cond
+    return None
+
+
+def _used_elsewhere(fn: Function, name: str, home: str) -> bool:
+    for bname, blk in fn.blocks.items():
+        for p in blk.phis:
+            if name in (v for (_, v) in p.args):
+                return True
+        for i in blk.body:
+            if name in i.uses():
+                return True
+        if blk.term.kind == "cbr" and blk.term.cond == name \
+                and bname != home:
+            return True
+    return False
+
+
+def _slot_dp(fn: Function, region: Set[str], order: List[str], entry: str,
+             latch: str):
+    """Per-array request offsets must be path-invariant at every block."""
+    block_in: Dict[str, Dict[str, Tuple[int, int]]] = {entry: {}}
+    out_at: Dict[str, Dict[str, Tuple[int, int]]] = {}
+    for b in order:
+        if b not in block_in:
+            return {}, {}, f"loop block {b} unreachable from the body entry"
+        off = dict(block_in[b])
+        for i in fn.blocks[b].body:
+            if i.op == "consume_ld":
+                ld, st = off.get(i.array, (0, 0))
+                off[i.array] = (ld + 1, st)
+            elif i.op in ("produce_st", "poison_st"):
+                ld, st = off.get(i.array, (0, 0))
+                off[i.array] = (ld, st + 1)
+        out_at[b] = off
+        for t in fn.blocks[b].term.succs():
+            if t not in region:
+                continue
+            if t in block_in:
+                if block_in[t] != off:
+                    return {}, {}, (f"request counts diverge at join {t} "
+                                    f"(paths are not iteration-uniform)")
+            else:
+                block_in[t] = off
+    total = out_at.get(latch, {})
+    k_loads = {a: ld for a, (ld, st) in sorted(total.items())}
+    k_stores = {a: st for a, (ld, st) in sorted(total.items())}
+    return k_loads, k_stores, None

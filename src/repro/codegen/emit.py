@@ -41,16 +41,42 @@ without snapshotting.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from ..core.ir import Function
 from ..core.sim.compile import _BINOP_EXPR, _compile_ns, _Namer
-from .analysis import CodegenError, SLICE_OPS
+from .analysis import CodegenError, SLICE_OPS, uniform_loops
 
-MODES = ("agu-stream", "cu-numpy", "cu-jax")
+MODES = ("agu-stream", "cu-numpy", "cu-jax", "cu-vector")
 
 _DAE_OPS = frozenset({"send_ld", "send_st", "consume_ld", "produce_st",
                       "poison_st"})
+
+# binop -> batched expression over the vector helpers (repro.codegen.vector):
+# everything the scalar table wraps in int()/bool() gets a helper that
+# applies the same wrapping lane-wise, and the wrap-prone integer ops
+# (+,-,*) get overflow-checked helpers.  Integer lanes are int64 — the
+# state-machine emitters compute in unbounded Python ints, so a lane
+# overflow raises CodegenError and the run retries on the state machine
+# rather than committing wrapped values.
+_VECOP_EXPR = {
+    "+": "_vadd({a}, {b})",
+    "-": "_vsub({a}, {b})",
+    "*": "_vmul({a}, {b})",
+    "//": "_vdiv({a}, {b})",
+    "%": "_vmod({a}, {b})",
+    "<": "_vlt({a}, {b})",
+    "<=": "_vle({a}, {b})",
+    ">": "_vgt({a}, {b})",
+    ">=": "_vge({a}, {b})",
+    "==": "_veq({a}, {b})",
+    "!=": "_vne({a}, {b})",
+    "&": "_vand({a}, {b})",
+    "|": "_vor({a}, {b})",
+    "min": "_vmin({a}, {b})",
+    "max": "_vmax({a}, {b})",
+    "^": "_vxor({a}, {b})",
+}
 
 
 def _supported(fn: Function, mode: str) -> bool:
@@ -77,6 +103,8 @@ def emit_source(fn: Function, mode: str) -> Optional[str]:
     """
     if mode not in MODES:
         raise ValueError(f"unknown emission mode {mode!r}")
+    if mode == "cu-vector":
+        return _emit_vector(fn)
     if not _supported(fn, mode):
         return None
 
@@ -365,13 +393,336 @@ def emit_source(fn: Function, mode: str) -> Optional[str]:
 
 
 # ---------------------------------------------------------------------------
+# cu-vector: whole epochs as batched numpy expressions
+# ---------------------------------------------------------------------------
+
+
+def _emit_vector(fn: Function) -> Optional[str]:
+    """Vectorised CU: iteration-uniform loops run as epoch-batched array ops.
+
+    Loop control and code between loops stay a scalar state machine (same
+    dispatch skeleton as ``cu-numpy``), but each iteration-uniform
+    innermost loop collapses to an epoch loop: the driver plans a window
+    of ``m`` whole iterations (:mod:`repro.codegen.epochs`), serves every
+    ``consume_ld`` as a strided view of one bulk gather, the body runs
+    if-converted (block predicates are boolean lanes, ``cbr`` becomes
+    predicate arithmetic, join values become selects), and every store
+    slot ends up as one (value, poison-mask) lane pair handed back in a
+    single commit.  The driver may cut the window at the first committed
+    RAW hazard (optimistic disambiguation — see ``epochs.first_violation``)
+    and returns how many iterations actually retired; local-array stores
+    are applied after the cut for exactly that prefix.
+
+    Memory is written back only on success: locals live in private numpy
+    copies returned via ``stats['locals']``, decoupled state lives in the
+    driver.
+    """
+    loops, _ = uniform_loops(fn)
+    if loops is None:
+        return None
+    for blk in fn.blocks.values():
+        for i in blk.body:
+            if i.op not in SLICE_OPS or i.op in ("send_ld", "send_st"):
+                return None
+            if i.op == "bin" and i.args[0] not in _BINOP_EXPR:
+                return None
+
+    sym = _Namer()
+    blk_id = {name: i for i, name in enumerate(fn.blocks)}
+    region_of: Dict[str, int] = {}
+    for lid, ul in enumerate(loops):
+        for b in ul.blocks:
+            region_of[b] = lid
+    headers = {ul.header: lid for lid, ul in enumerate(loops)}
+
+    lines: List[str] = []
+    emit = lines.append
+
+    # -- inventory ----------------------------------------------------------
+    all_names = set()
+    for blk in fn.blocks.values():
+        for p in blk.phis:
+            all_names.add(p.dest)
+            all_names.update(v for (_, v) in p.args)
+        for i in blk.body:
+            if i.dest:
+                all_names.add(i.dest)
+            all_names.update(i.uses())
+        if blk.term is not None and blk.term.kind == "cbr":
+            all_names.add(blk.term.cond)
+    local_arrays = sorted({i.array for b in fn.blocks.values()
+                           for i in b.body if i.op in ("load", "store")})
+
+    # -- prologue -----------------------------------------------------------
+    emit("def _run(memory, _params, _drv, _max_steps):")
+    emit("    _regs = {}")
+    emit("    steps = 0")
+    for a in local_arrays:
+        s = sym(a)
+        emit(f"    _loc_{s} = memory[{a!r}].copy()")
+        emit(f"    _cast_{s} = memory[{a!r}].dtype.type")
+        emit(f"    _hi_{s} = len(_loc_{s}) - 1")
+    for name in sorted(all_names):
+        emit(f"    {sym(name)} = _params.get({name!r})")
+    emit(f"    _blk = {blk_id[fn.entry]}")
+    emit("    _prev = -1")
+    emit("    while True:")
+
+    first = True
+    for bname, blk in fn.blocks.items():
+        if bname in region_of:
+            continue  # inlined into its loop's epoch section
+        bid = blk_id[bname]
+        kw = "if" if first else "elif"
+        first = False
+        emit(f"        {kw} _blk == {bid}:")
+        ind = "            "
+        if bname in headers:
+            _emit_vector_loop(fn, loops[headers[bname]], headers[bname],
+                              sym, blk_id, emit, ind)
+            continue
+        emitted_any = _emit_scalar_block(fn, bname, blk, sym, blk_id, emit,
+                                         ind, local_arrays)
+        if not emitted_any:
+            emit(f"{ind}pass")
+
+    emit("        else:")
+    emit("            raise RuntimeError(f'codegen: bad block id {_blk}')")
+    return "\n".join(lines)
+
+
+def _emit_scalar_block(fn, bname, blk, sym, blk_id, emit, ind,
+                       local_arrays) -> bool:
+    """Non-loop block in cu-vector mode: scalar ops over numpy locals."""
+
+    def val(a) -> str:
+        return sym(a) if isinstance(a, str) else repr(a)
+
+    emitted_any = False
+    if blk.phis:
+        preds = []
+        for p in blk.phis:
+            for (pb, _) in p.args:
+                if pb not in preds:
+                    preds.append(pb)
+        kw2 = "if"
+        for pb in preds:
+            dests, srcs = [], []
+            for p in blk.phis:
+                for (ppb, v) in p.args:
+                    if ppb == pb:
+                        dests.append(sym(p.dest))
+                        srcs.append(sym(v))
+                        break
+                else:
+                    dests.append(sym(p.dest))
+                    srcs.append(f"_phi_err({p.dest!r}, {bname!r}, _prev)")
+            emit(f"{ind}{kw2} _prev == {blk_id.get(pb, -2)}:")
+            emit(f"{ind}    {', '.join(dests)} = {', '.join(srcs)}")
+            kw2 = "elif"
+        emit(f"{ind}else:")
+        emit(f"{ind}    _phi_err({blk.phis[0].dest!r}, {bname!r}, _prev)")
+        emitted_any = True
+
+    if blk.body:
+        emit(f"{ind}steps += {len(blk.body)}")
+        emit(f"{ind}if steps > _max_steps:")
+        emit(f"{ind}    raise _CodegenError("
+             f"'generated kernel step budget exceeded')")
+        emitted_any = True
+    for instr in blk.body:
+        op = instr.op
+        if op == "const":
+            emit(f"{ind}{sym(instr.dest)} = {instr.args[0]!r}")
+        elif op == "bin":
+            o, a, b = instr.args
+            expr = _BINOP_EXPR[o].format(a=val(a), b=val(b))
+            emit(f"{ind}{sym(instr.dest)} = {expr}")
+        elif op == "select":
+            c, a, b = instr.args
+            emit(f"{ind}{sym(instr.dest)} = "
+                 f"{val(a)} if {val(c)} else {val(b)}")
+        elif op == "load":
+            s = sym(instr.array)
+            emit(f"{ind}_a = int({val(instr.args[0])})")
+            emit(f"{ind}if _a < 0: _a = 0")
+            emit(f"{ind}elif _a > _hi_{s}: _a = _hi_{s}")
+            emit(f"{ind}{sym(instr.dest)} = _loc_{s}[_a].item()")
+        elif op == "store":
+            s = sym(instr.array)
+            emit(f"{ind}_a = int({val(instr.args[0])})")
+            emit(f"{ind}if 0 <= _a <= _hi_{s}:")
+            emit(f"{ind}    _loc_{s}[_a] = "
+                 f"_cast_{s}({val(instr.args[1])})")
+        elif op == "setreg":
+            if "imm" in instr.meta:
+                emit(f"{ind}_regs[{instr.args[0]!r}] = "
+                     f"{instr.meta['imm']!r}")
+            else:
+                emit(f"{ind}_regs[{instr.args[0]!r}] = "
+                     f"{val(instr.args[1])}")
+        elif op == "getreg":
+            emit(f"{ind}{sym(instr.dest)} = "
+                 f"_regs.get({instr.args[0]!r}, 0)")
+        elif op == "print":
+            emit(f"{ind}pass")
+
+    term = blk.term
+    if term.kind == "ret":
+        emit(f"{ind}_stats = _drv.stats()")
+        emit(f"{ind}_stats['locals'] = {{"
+             + ", ".join(f"{a!r}: _loc_{sym(a)}" for a in local_arrays)
+             + "}")
+        emit(f"{ind}return _stats")
+        emitted_any = True
+    else:
+        if not blk.synthetic:
+            emit(f"{ind}_prev = {blk_id[bname]}")
+        if term.kind == "br":
+            emit(f"{ind}_blk = {blk_id[term.targets[0]]}")
+        else:
+            emit(f"{ind}_blk = {blk_id[term.targets[0]]} "
+                 f"if {sym(term.cond)} else {blk_id[term.targets[1]]}")
+        emitted_any = True
+    return emitted_any
+
+
+def _emit_vector_loop(fn, ul, lid, sym, blk_id, emit, ind) -> None:
+    """Epoch section for one iteration-uniform loop, at its header's id."""
+
+    def val(a) -> str:
+        return sym(a) if isinstance(a, str) else repr(a)
+
+    hb = fn.blocks[ul.header]
+    phi = hb.phis[0]
+    non_latch = [(pb, v) for (pb, v) in phi.args if pb != ul.latch]
+    kw = "if"
+    for (pb, v) in non_latch:
+        emit(f"{ind}{kw} _prev == {blk_id.get(pb, -2)}:")
+        emit(f"{ind}    _iv0 = {sym(v)}")
+        kw = "elif"
+    emit(f"{ind}else:")
+    emit(f"{ind}    _phi_err({phi.dest!r}, {ul.header!r}, _prev)")
+    emit(f"{ind}_T = {val(ul.bound)} - _iv0")
+    emit(f"{ind}if _T < 0: _T = 0")
+    emit(f"{ind}_t0 = 0")
+    emit(f"{ind}while _t0 < _T:")
+    ind2 = ind + "    "
+    emit(f"{ind2}_m = _drv.plan({lid}, _T - _t0)")
+    emit(f"{ind2}_ld = _drv.gather({lid}, _m)")
+    emit(f"{ind2}{sym(ul.iv)} = _iv0 + _t0 + _np.arange(_m)")
+
+    # per-slot accumulators: value lanes and poison-mask lanes
+    slot_arrays = sorted(a for a, s in ul.k_stores.items() if s)
+    for a in slot_arrays:
+        for s in range(ul.k_stores[a]):
+            emit(f"{ind2}_sv_{sym(a)}_{s} = 0")
+            emit(f"{ind2}_sp_{sym(a)}_{s} = False")
+
+    # if-converted region: block predicates, straight-line lanes
+    pred_of: Dict[str, str] = {}
+    in_edges: Dict[str, List[str]] = {b: [] for b in ul.blocks}
+    loff: Dict[str, Dict[str, int]] = {ul.blocks[0]: {}}
+    soff: Dict[str, Dict[str, int]] = {ul.blocks[0]: {}}
+    local_stores: List[Tuple[str, str, str, str]] = []
+    for bi, bname in enumerate(ul.blocks):
+        blk = fn.blocks[bname]
+        pv = f"_p{bi}"
+        if bi == 0:
+            emit(f"{ind2}{pv} = True")
+        else:
+            terms = in_edges[bname]
+            emit(f"{ind2}{pv} = {terms[0]}")
+            for t in terms[1:]:
+                emit(f"{ind2}{pv} = {pv} | {t}")
+        pred_of[bname] = pv
+
+        lo = dict(loff[bname])
+        so = dict(soff[bname])
+        for instr in blk.body:
+            op = instr.op
+            if op == "const":
+                emit(f"{ind2}{sym(instr.dest)} = {instr.args[0]!r}")
+            elif op == "bin":
+                o, a, b = instr.args
+                expr = _VECOP_EXPR[o].format(a=val(a), b=val(b))
+                emit(f"{ind2}{sym(instr.dest)} = {expr}")
+            elif op == "select":
+                c, a, b = instr.args
+                emit(f"{ind2}{sym(instr.dest)} = "
+                     f"_vsel({val(c)}, {val(a)}, {val(b)})")
+            elif op == "load":
+                s = sym(instr.array)
+                emit(f"{ind2}{sym(instr.dest)} = "
+                     f"_vload(_loc_{s}, {val(instr.args[0])}, _hi_{s})")
+            elif op == "store":
+                s = sym(instr.array)
+                local_stores.append(
+                    (s, val(instr.args[0]), val(instr.args[1]), pv))
+            elif op == "consume_ld":
+                k = lo.get(instr.array, 0)
+                lo[instr.array] = k + 1
+                kk = ul.k_loads[instr.array]
+                emit(f"{ind2}{sym(instr.dest)} = "
+                     f"_ld[{instr.array!r}][{k}::{kk}]")
+            elif op == "produce_st":
+                s = so.get(instr.array, 0)
+                so[instr.array] = s + 1
+                t = f"_sv_{sym(instr.array)}_{s}"
+                emit(f"{ind2}{t} = _vwhere({pv}, "
+                     f"{val(instr.args[0])}, {t})")
+            elif op == "poison_st":
+                s = so.get(instr.array, 0)
+                so[instr.array] = s + 1
+                t = f"_sp_{sym(instr.array)}_{s}"
+                emit(f"{ind2}{t} = {t} | {pv}")
+            elif op == "print":
+                emit(f"{ind2}pass")
+
+        term = blk.term
+        if term.kind == "cbr":
+            t0, t1 = term.targets
+            if t0 in in_edges:
+                in_edges[t0].append(f"_band({pv}, {val(term.cond)})")
+                loff.setdefault(t0, lo)
+                soff.setdefault(t0, so)
+            if t1 in in_edges:
+                in_edges[t1].append(f"_bnot({pv}, {val(term.cond)})")
+                loff.setdefault(t1, lo)
+                soff.setdefault(t1, so)
+        else:
+            t0 = term.targets[0]
+            if t0 in in_edges:
+                in_edges[t0].append(pv)
+                loff.setdefault(t0, lo)
+                soff.setdefault(t0, so)
+
+    commit = "{" + ", ".join(
+        f"{a!r}: (({', '.join(f'_sv_{sym(a)}_{s}' for s in range(ul.k_stores[a]))},), "
+        f"({', '.join(f'_sp_{sym(a)}_{s}' for s in range(ul.k_stores[a]))},))"
+        for a in slot_arrays) + "}"
+    emit(f"{ind2}_m2 = _drv.commit({lid}, _m, {commit})")
+    for (s, ix, v, pv) in local_stores:
+        emit(f"{ind2}_vstore(_loc_{s}, {ix}, {v}, {pv}, _hi_{s}, _m2)")
+    emit(f"{ind2}_t0 += _m2")
+    emit(f"{ind2}steps += _m2 * {ul.n_ops}")
+    emit(f"{ind2}if steps > _max_steps:")
+    emit(f"{ind2}    raise _CodegenError("
+         f"'generated kernel step budget exceeded')")
+    emit(f"{ind}{sym(ul.iv)} = _iv0 + _T")
+    emit(f"{ind}_prev = {blk_id[ul.header]}")
+    emit(f"{ind}_blk = {blk_id[ul.exit]}")
+
+
+# ---------------------------------------------------------------------------
 # exec-compilation, memoised per Function (same contract as sim.compile:
 # a Function must not be mutated after it first runs)
 # ---------------------------------------------------------------------------
 
 _ATTR = {"agu-stream": "_codegen_agu_make",
          "cu-numpy": "_codegen_cu_numpy_make",
-         "cu-jax": "_codegen_cu_jax_make"}
+         "cu-jax": "_codegen_cu_jax_make",
+         "cu-vector": "_codegen_cu_vector_make"}
 
 
 def _phi_err(dest, bname, prev):
@@ -397,9 +748,12 @@ def compile_mode(fn: Function, mode: str):
         return None
     from ..core.sim.base import POISON
     from .streams import Streams
-    ns = _compile_ns(src, f"<codegen-{mode}:{fn.name}>",
-                     {"_CodegenError": CodegenError, "_phi_err": _phi_err,
-                      "_POISON": POISON, "_Streams": Streams})
+    base = {"_CodegenError": CodegenError, "_phi_err": _phi_err,
+            "_POISON": POISON, "_Streams": Streams}
+    if mode == "cu-vector":
+        from .vector import VECTOR_NS
+        base.update(VECTOR_NS)
+    ns = _compile_ns(src, f"<codegen-{mode}:{fn.name}>", base)
     make = ns["_run"]
     make.__source__ = src
     setattr(fn, attr, make)

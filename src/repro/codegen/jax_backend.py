@@ -37,19 +37,10 @@ import numpy as np
 
 from .analysis import CodegenError
 from .emit import compile_mode
+from .epochs import I32_MAX as _I32_MAX
+from .epochs import I32_MIN as _I32_MIN
+from .epochs import MAX_BATCH, bucket, gather_limit
 from .streams import Streams
-
-_I32_MIN, _I32_MAX = -(2 ** 31), 2 ** 31 - 1
-#: largest single gather/scatter batch (bounds jit shape variety and the
-#: interpret-mode grid length); epochs longer than this are split.
-MAX_BATCH = 512
-
-
-def _bucket(n: int) -> int:
-    b = 8
-    while b < n:
-        b <<= 1
-    return b
 
 
 def _check_i32(name: str, arr: np.ndarray) -> None:
@@ -126,7 +117,7 @@ class _ArrayDriver:
         from ..kernels.spec_gather import spec_gather
         from ..kernels.spec_scatter import spec_scatter_add
         n = len(idx_list)
-        b = _bucket(n)
+        b = bucket(n, self.block_n)
         idx = np.full(b, -1, np.int32)
         idx[:n] = idx_list
         vals = np.zeros((b, 1), np.int32)
@@ -149,29 +140,17 @@ class _ArrayDriver:
         lds = self.ld_clamped
         if self.lp >= len(lds):
             return 0
-        # epoch boundary: stop before the first load whose raw address
-        # aliases an unflushed (>= fp) store request that is older in the
-        # combined stream — its value must come through a flush first
-        take: list = []
-        pend = set()
-        j = self.fp
-        k = self.lp
-        st_pos, st_addrs, ld_pos, ld_raw = (self.st_pos, self.st_addrs,
-                                            self.ld_pos, self.ld_raw)
-        n_st = len(st_addrs)
-        while k < len(lds) and len(take) < MAX_BATCH:
-            p = ld_pos[k]
-            while j < n_st and st_pos[j] < p:
-                pend.add(st_addrs[j])
-                j += 1
-            if ld_raw[k] in pend:
-                break
-            take.append(lds[k])
-            k += 1
+        # epoch boundary (shared scheduler, pessimistic fence): stop
+        # before the first load whose raw address aliases an unflushed
+        # (>= fp) store request that is older in the combined stream —
+        # its value must come through a flush first
+        k = gather_limit(self.ld_raw, self.ld_pos, self.st_addrs,
+                         self.st_pos, self.lp, self.fp)
+        take = lds[self.lp:k]
         if not take:
             return 0
         n = len(take)
-        b = _bucket(n)
+        b = bucket(n, self.block_n)
         idx = np.full(b, -1, np.int32)
         idx[:n] = take
         vals = spec_gather(self.table, jnp.asarray(idx), block_d=1,
@@ -229,8 +208,12 @@ def run_jax(compiled, memory: Dict[str, np.ndarray],
         memory[a][:] = tab
     stats["gather_calls"] = sum(d.gather_calls for d in drivers.values())
     stats["scatter_calls"] = sum(d.scatter_calls for d in drivers.values())
-    stats["ld_leftover"] = sum(len(d.ld_clamped) - d.lp
-                               for d in drivers.values())
+    # leftover contract (same meaning on every path, incl. the coupled
+    # interpreter and the vectorised CU): requests the AGU issued that the
+    # CU never consumed/valued — legitimate speculative over-issue past CU
+    # exit.  Values gathered into a buffer but never popped still count.
+    stats["ld_leftover"] = sum(len(d.ld_clamped) - d.lp + len(bufs[a])
+                               for a, d in drivers.items())
     stats["st_leftover"] = sum(len(d.st_addrs) - d.fp
                                for d in drivers.values())
     return stats

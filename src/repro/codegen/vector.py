@@ -1,0 +1,530 @@
+"""Vectorised CU execution: epoch drivers for the ``cu-vector`` mode.
+
+The emitted vector CU (:func:`repro.codegen.emit.emit_source`, mode
+``cu-vector``) is target-agnostic: it computes whole epochs as batched
+numpy expressions and talks to a *driver* for everything that touches
+decoupled memory —
+
+* ``plan(loop, remaining)``   — window size in whole iterations
+  (:func:`repro.codegen.epochs.plan_iters`);
+* ``gather(loop, m)``         — one bulk load per array for the window,
+  returned as flat iteration-major int lanes;
+* ``commit(loop, m, stores)`` — per-array per-slot (value, poison-mask)
+  lanes; the driver cuts the window at the first committed RAW hazard
+  (:func:`repro.codegen.epochs.first_violation`), commits the surviving
+  prefix in stream order with write-after-write collisions resolved
+  last-writer-wins (:func:`repro.codegen.epochs.last_writer_keep`), and
+  returns how many iterations retired;
+* ``stats()``                 — the same counters the state-machine
+  emitters report (committed/poisoned/consumed/leftovers).
+
+Two drivers implement the memory operations:
+
+* :class:`_NumpyVectorDriver` — gathers/scatters against private numpy
+  working copies (any dtype), written back only after the whole run
+  succeeds.
+* :class:`_JaxVectorDriver` — the decoupled arrays live on device as
+  ``(n, 1)`` int32 tables and every epoch is **one** ``spec_gather`` plus
+  at most one ``spec_scatter_add`` per array: poisoned slots are ``-1``
+  indices (the kernels' pad-with-poison path), superseded WAW slots are
+  masked to ``-1`` instead of splitting the batch, and the add-delta for
+  each surviving slot is computed against a host mirror of the table
+  (exact by induction: the table is only ever mutated by these
+  scatters).  Deltas are exact in two's-complement, as in the
+  state-machine driver.  An epoch whose stores all poison skips the
+  scatter entirely — the DU drops every slot at commit, so the call
+  would be a no-op.
+
+Integer lanes are int64 (jax gathers are widened host-side before the
+body runs, so intermediate arithmetic matches the state machine's
+behaviour up to int64 range; the int32 subset check still guards every
+committed value).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from .analysis import CodegenError, UniformLoop, uniform_loops
+from .epochs import (I32_MAX as _I32_MAX, I32_MIN as _I32_MIN, bucket,
+                     first_violation, last_writer_keep, plan_iters)
+from .streams import Streams
+
+
+# ---------------------------------------------------------------------------
+# runtime helpers injected into emitted cu-vector code (lane-wise versions
+# of the scalar emitters' int()/bool()-wrapped expression table)
+# ---------------------------------------------------------------------------
+
+
+def _is_arr(*xs) -> bool:
+    return any(isinstance(x, np.ndarray) for x in xs)
+
+
+def _int_arr(*xs) -> bool:
+    """True when every operand is integral AND at least one is an int
+    ndarray — the combination whose +,-,* would silently wrap at int64
+    (floats don't wrap; scalar-scalar stays exact Python)."""
+    has = False
+    for x in xs:
+        if isinstance(x, np.ndarray):
+            if x.dtype.kind not in "iu":
+                return False
+            has = True
+        elif isinstance(x, (float, np.floating)):
+            return False
+    return has
+
+
+def _overflow() -> "CodegenError":
+    return CodegenError(
+        "vector lane overflow: an intermediate exceeds int64 (the "
+        "state-machine emitters compute in unbounded Python ints)")
+
+
+def _vadd(a, b):
+    if not _int_arr(a, b):
+        return a + b
+    try:
+        c = np.add(a, b)
+        # two's-complement add overflow: result sign differs from both
+        if (((a ^ c) & (b ^ c)) < 0).any():
+            raise _overflow()
+    except OverflowError:  # a Python-int operand beyond int64
+        raise _overflow() from None
+    return c
+
+
+def _vsub(a, b):
+    if not _int_arr(a, b):
+        return a - b
+    try:
+        c = np.subtract(a, b)
+        if (((a ^ b) & (a ^ c)) < 0).any():
+            raise _overflow()
+    except OverflowError:
+        raise _overflow() from None
+    return c
+
+
+def _bound(x) -> int:
+    """Largest absolute lane value, as an exact Python int."""
+    if isinstance(x, np.ndarray):
+        if not x.size:
+            return 0
+        return max(abs(int(x.min())), abs(int(x.max())))
+    return abs(int(x))
+
+
+def _vmul(a, b):
+    if not _int_arr(a, b):
+        return a * b
+    try:
+        c = np.multiply(a, b)
+        # fast path: lane extrema prove no product can leave int64
+        if _bound(a) * _bound(b) > 2 ** 63 - 1:
+            # a wrapped product differs from the true one by k*2**64,
+            # which no int64 divisor can fold back onto `a` — exact
+            # divide-back check on every lane
+            bb = np.asarray(b)
+            ok = np.where(bb != 0,
+                          np.floor_divide(c, np.where(bb == 0, 1, bb))
+                          == a,
+                          c == 0)
+            if not np.all(ok):
+                raise _overflow()
+    except OverflowError:
+        raise _overflow() from None
+    return c
+
+
+def _int_lanes(x):
+    x = np.asarray(x)
+    return x.astype(np.int64) if x.dtype.kind == "f" else x
+
+
+def _vlt(a, b):
+    return np.less(a, b).astype(np.int64) if _is_arr(a, b) else int(a < b)
+
+
+def _vle(a, b):
+    return (np.less_equal(a, b).astype(np.int64) if _is_arr(a, b)
+            else int(a <= b))
+
+
+def _vgt(a, b):
+    return np.greater(a, b).astype(np.int64) if _is_arr(a, b) else int(a > b)
+
+
+def _vge(a, b):
+    return (np.greater_equal(a, b).astype(np.int64) if _is_arr(a, b)
+            else int(a >= b))
+
+
+def _veq(a, b):
+    return np.equal(a, b).astype(np.int64) if _is_arr(a, b) else int(a == b)
+
+
+def _vne(a, b):
+    return (np.not_equal(a, b).astype(np.int64) if _is_arr(a, b)
+            else int(a != b))
+
+
+def _vand(a, b):
+    if _is_arr(a, b):
+        return ((np.asarray(a) != 0) & (np.asarray(b) != 0)).astype(np.int64)
+    return int(bool(a) and bool(b))
+
+
+def _vor(a, b):
+    if _is_arr(a, b):
+        return ((np.asarray(a) != 0) | (np.asarray(b) != 0)).astype(np.int64)
+    return int(bool(a) or bool(b))
+
+
+def _vxor(a, b):
+    if _is_arr(a, b):
+        return _int_lanes(a) ^ _int_lanes(b)
+    return int(a) ^ int(b)
+
+
+def _vmin(a, b):
+    return np.minimum(a, b) if _is_arr(a, b) else min(a, b)
+
+
+def _vmax(a, b):
+    return np.maximum(a, b) if _is_arr(a, b) else max(a, b)
+
+
+def _vdiv(a, b):
+    if not _is_arr(a, b):
+        return int(a) // int(b) if b else 0
+    aa, bb = _int_lanes(a), _int_lanes(b)
+    safe = np.where(bb == 0, 1, bb)
+    return np.where(bb != 0, aa // safe, 0)
+
+
+def _vmod(a, b):
+    if not _is_arr(a, b):
+        return int(a) % int(b) if b else 0
+    aa, bb = _int_lanes(a), _int_lanes(b)
+    safe = np.where(bb == 0, 1, bb)
+    return np.where(bb != 0, aa % safe, 0)
+
+
+def _vsel(c, t, f):
+    if isinstance(c, np.ndarray):
+        return np.where(c != 0, t, f)
+    return t if c else f
+
+
+def _vwhere(p, t, f):
+    if isinstance(p, np.ndarray):
+        return np.where(p, t, f)
+    return t if p else f
+
+
+def _band(p, c):
+    if isinstance(c, np.ndarray):
+        return p & (c != 0)
+    return p & bool(c)
+
+
+def _bnot(p, c):
+    if isinstance(c, np.ndarray):
+        return p & (c == 0)
+    return p & (not c)
+
+
+def _vload(arr, ix, hi):
+    if isinstance(ix, np.ndarray):
+        if ix.dtype.kind == "f":
+            ix = ix.astype(np.int64)
+        return arr[np.clip(ix, 0, hi)]
+    a = int(ix)
+    a = 0 if a < 0 else (hi if a > hi else a)
+    return arr[a]
+
+
+def _vstore(arr, ix, val, pred, hi, m2):
+    """Masked local-array scatter for the committed epoch prefix.
+
+    Applied *after* the driver's commit decided the cut, so lanes beyond
+    ``m2`` (whose values may be stale) never land.  Out-of-bounds lanes
+    are dropped (the scalar emitters' silent-skip store semantics), and
+    duplicate destinations resolve last-writer-wins.
+    """
+    if isinstance(pred, np.ndarray):
+        pred = pred[:m2]
+    if isinstance(ix, np.ndarray):
+        ix = ix[:m2]
+    if isinstance(val, np.ndarray):
+        val = val[:m2]
+    ixa = np.asarray(ix)
+    if ixa.dtype.kind == "f":
+        ixa = ixa.astype(np.int64)
+    ixa, valb, predb = np.broadcast_arrays(np.atleast_1d(ixa),
+                                           np.atleast_1d(np.asarray(val)),
+                                           np.atleast_1d(np.asarray(pred)))
+    ok = predb & (ixa >= 0) & (ixa <= hi)
+    if not ok.any():
+        return
+    eff = np.where(ok, ixa, -1)
+    keep = last_writer_keep(eff)
+    arr[eff[keep]] = valb[keep]
+
+
+VECTOR_NS = {
+    "_np": np, "_band": _band, "_bnot": _bnot, "_vsel": _vsel,
+    "_vwhere": _vwhere, "_vload": _vload, "_vstore": _vstore,
+    "_vadd": _vadd, "_vsub": _vsub, "_vmul": _vmul,
+    "_vlt": _vlt, "_vle": _vle, "_vgt": _vgt, "_vge": _vge,
+    "_veq": _veq, "_vne": _vne, "_vand": _vand, "_vor": _vor,
+    "_vxor": _vxor, "_vmin": _vmin, "_vmax": _vmax,
+    "_vdiv": _vdiv, "_vmod": _vmod,
+}
+
+
+# ---------------------------------------------------------------------------
+# epoch drivers
+# ---------------------------------------------------------------------------
+
+
+class _VectorDriver:
+    """Stream cursors + epoch planning shared by both targets."""
+
+    def __init__(self, loops: List[UniformLoop], streams: Streams,
+                 memory: Dict[str, np.ndarray], arrays: List[str]):
+        self.loops = loops
+        self.arrays = arrays
+        self.ld_raw = {a: streams.ld_raw.get(a, []) for a in arrays}
+        self.ld_pos = {a: streams.ld_pos.get(a, []) for a in arrays}
+        self.st_addrs = {a: streams.st_addrs.get(a, []) for a in arrays}
+        self.st_pos = {a: streams.st_pos.get(a, []) for a in arrays}
+        self.np_ld = {a: np.asarray(streams.ld_clamped.get(a, []),
+                                    dtype=np.int64) for a in arrays}
+        self.np_st = {a: np.asarray(self.st_addrs[a], dtype=np.int64)
+                      for a in arrays}
+        self.hi = {a: len(memory[a]) - 1 for a in arrays}
+        self.lp = {a: 0 for a in arrays}
+        self.sp = {a: 0 for a in arrays}
+        self.committed = 0
+        self.poisoned = 0
+        self.consumed = 0
+
+    # -- emitted-code interface ---------------------------------------------
+    def plan(self, lid: int, remaining: int) -> int:
+        ul = self.loops[lid]
+        m = plan_iters(remaining, ul.k_loads, ul.k_stores)
+        if m <= 0:
+            raise CodegenError(
+                "vector epoch cannot hold a single iteration "
+                "(per-iteration request count exceeds the batch bound)")
+        return m
+
+    def gather(self, lid: int, m: int) -> Dict[str, np.ndarray]:
+        ul = self.loops[lid]
+        out: Dict[str, np.ndarray] = {}
+        for a, k in ul.k_loads.items():
+            if not k:
+                continue
+            lp = self.lp[a]
+            idx = self.np_ld[a][lp:lp + m * k]
+            if len(idx) < m * k:
+                raise CodegenError(f"load stream underrun @{a}")
+            out[a] = self._gather(a, idx)
+        return out
+
+    def commit(self, lid: int, m: int, stores) -> int:
+        ul = self.loops[lid]
+        flat: Dict[str, tuple] = {}
+        for a, (vals, pois) in stores.items():
+            s = ul.k_stores[a]
+            vflat = np.column_stack(
+                [np.broadcast_to(np.asarray(v), (m,)) for v in vals]
+            ).reshape(-1) if s else np.empty(0, np.int64)
+            pflat = np.column_stack(
+                [np.broadcast_to(np.asarray(p, dtype=bool), (m,))
+                 for p in pois]).reshape(-1) if s else np.empty(0, bool)
+            flat[a] = (vflat, pflat)
+
+        m2 = m
+        for a, (_, pflat) in flat.items():
+            cut = first_violation(
+                m, ul.k_loads.get(a, 0), ul.k_stores[a],
+                self.ld_raw[a], self.ld_pos[a],
+                self.st_addrs[a], self.st_pos[a],
+                pflat, self.lp[a], self.sp[a])
+            m2 = min(m2, cut)
+        if m2 == 0:
+            raise CodegenError(
+                "vector epoch stalled: a load aliases a committed store "
+                "of the same iteration (un-vectorisable RAW)")
+
+        for a, (vflat, pflat) in flat.items():
+            n = m2 * ul.k_stores[a]
+            sp = self.sp[a]
+            addrs = self.np_st[a][sp:sp + n]
+            if len(addrs) < n:
+                raise CodegenError(f"store stream underrun @{a}")
+            vals, pois = vflat[:n], pflat[:n]
+            ok = ~pois
+            oob = ok & ((addrs < 0) | (addrs > self.hi[a]))
+            if oob.any():
+                i = int(np.argmax(oob))
+                raise CodegenError(
+                    f"non-poisoned store out of bounds: {a}[{int(addrs[i])}]")
+            self._scatter(a, addrs, vals, pois)
+            self.sp[a] += n
+            nc = int(ok.sum())
+            self.committed += nc
+            self.poisoned += n - nc
+        for a, k in ul.k_loads.items():
+            if k:
+                self.lp[a] += m2 * k
+                self.consumed += m2 * k
+        return m2
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "stores_committed": self.committed,
+            "stores_poisoned": self.poisoned,
+            "loads_consumed": self.consumed,
+            "ld_leftover": sum(len(self.ld_raw[a]) - self.lp[a]
+                               for a in self.arrays),
+            "st_leftover": sum(len(self.st_addrs[a]) - self.sp[a]
+                               for a in self.arrays),
+        }
+
+
+class _NumpyVectorDriver(_VectorDriver):
+    """Epochs against private numpy working copies (any dtype)."""
+
+    def __init__(self, loops, streams, memory, arrays):
+        super().__init__(loops, streams, memory, arrays)
+        self.work = {a: memory[a].copy() for a in arrays}
+
+    def _gather(self, a: str, idx: np.ndarray) -> np.ndarray:
+        return self.work[a][idx]
+
+    def _scatter(self, a, addrs, vals, pois) -> None:
+        eff = np.where(pois, -1, addrs)
+        keep = last_writer_keep(eff)
+        if keep.any():
+            self.work[a][eff[keep]] = vals[keep]
+
+    def finalize(self, memory: Dict[str, np.ndarray]) -> None:
+        for a in self.arrays:
+            memory[a][:] = self.work[a]
+
+
+class _JaxVectorDriver(_VectorDriver):
+    """Epochs against device int32 tables through the Pallas kernels."""
+
+    def __init__(self, loops, streams, memory, arrays, block_n, interpret):
+        super().__init__(loops, streams, memory, arrays)
+        import jax.numpy as jnp
+        self.table = {a: jnp.asarray(memory[a].astype(np.int32)
+                                     .reshape(-1, 1)) for a in arrays}
+        self.mirror = {a: memory[a].astype(np.int64) for a in arrays}
+        self.block_n = block_n
+        self.interpret = interpret
+        self.gather_calls = 0
+        self.scatter_calls = 0
+
+    def _gather(self, a: str, idx: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+        from ..kernels.spec_gather import spec_gather
+        n = len(idx)
+        b = bucket(n, self.block_n)
+        pad = np.full(b, -1, np.int32)
+        pad[:n] = idx
+        vals = spec_gather(self.table[a], jnp.asarray(pad), block_d=1,
+                           block_n=min(max(8, self.block_n), b),
+                           interpret=self.interpret)
+        self.gather_calls += 1
+        return np.asarray(vals[:n, 0]).astype(np.int64)
+
+    def _scatter(self, a, addrs, vals, pois) -> None:
+        import jax.numpy as jnp
+        from ..kernels.spec_scatter import spec_scatter_add
+        v64 = np.asarray(vals).astype(np.int64)
+        ok = ~pois
+        if ok.any():
+            lo, hi = int(v64[ok].min()), int(v64[ok].max())
+            if lo < _I32_MIN or hi > _I32_MAX:
+                raise CodegenError(
+                    f"jax target: store value outside int32 range @{a}")
+        eff = np.where(pois, -1, addrs)
+        keep = last_writer_keep(eff)
+        if not keep.any():
+            return  # every slot poisons or is superseded: commit is a no-op
+        n = len(eff)
+        b = bucket(n, self.block_n)
+        idx = np.full(b, -1, np.int32)
+        idx[:n] = np.where(keep, eff, -1)
+        cur = self.mirror[a][np.clip(eff, 0, self.hi[a])]
+        delta = np.zeros((b, 1), np.int32)
+        # int64 -> int32 cast wraps; the scatter-add re-wraps, so the
+        # committed value is exact in two's-complement (as in the
+        # state-machine driver's delta trick)
+        delta[:n, 0] = np.where(keep, v64 - cur, 0).astype(np.int32)
+        self.table[a] = spec_scatter_add(
+            self.table[a], jnp.asarray(idx), jnp.asarray(delta), block_d=1,
+            block_n=min(max(8, self.block_n), b), interpret=self.interpret)
+        self.scatter_calls += 1
+        self.mirror[a][eff[keep]] = v64[keep]
+
+    def finalize(self, memory: Dict[str, np.ndarray]) -> None:
+        for a in self.arrays:
+            tab = np.asarray(self.table[a][:, 0]).astype(memory[a].dtype)
+            memory[a][:] = tab
+
+    def stats(self) -> Dict[str, Any]:
+        d = super().stats()
+        d["gather_calls"] = self.gather_calls
+        d["scatter_calls"] = self.scatter_calls
+        return d
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def run_vector(compiled, memory: Dict[str, np.ndarray],
+               params: Dict[str, Any], streams: Streams, analysis,
+               target: str, *, interpret: Optional[bool] = None,
+               block_n: int = 8, max_steps: int = 2_000_000
+               ) -> Dict[str, Any]:
+    """Execute the vectorised CU; mutates ``memory`` only on success.
+
+    Raises :class:`CodegenError` (memory untouched) when the CU is not
+    iteration-uniform or a dynamic hazard stalls an epoch — the caller
+    then retries through the per-element state machine.
+    """
+    from .emit import compile_mode
+    cu_make = compile_mode(compiled.cu, "cu-vector")
+    if cu_make is None:
+        loops, why = uniform_loops(compiled.cu)
+        raise CodegenError(
+            f"CU not iteration-uniform: {why or 'vector emission refused'}")
+    loops, _ = uniform_loops(compiled.cu)
+
+    dec = sorted(set(streams.arrays) | set(analysis.decoupled))
+    if target == "jax":
+        from .jax_backend import _check_i32
+        for a in dec:
+            _check_i32(a, memory[a])
+        drv: _VectorDriver = _JaxVectorDriver(loops, streams, memory, dec,
+                                              block_n, interpret)
+    else:
+        drv = _NumpyVectorDriver(loops, streams, memory, dec)
+
+    stats = cu_make(memory, dict(params), drv, max_steps)
+    # every epoch committed — only now touch the caller's memory
+    for a, mirror in stats.pop("locals", {}).items():
+        memory[a][:] = mirror
+    drv.finalize(memory)
+    return stats

@@ -19,6 +19,13 @@ the tile.  The feature dim is tiled to keep the VMEM working set bounded
 for wide rows.  ``n`` not divisible by ``block_n`` is handled by padding
 the index vector with poison (``-1``) — padded rows fetch row 0 and mask
 to zero, and the pad is sliced off the output.
+
+Ragged-``n`` contract with the codegen backend: ``block_n`` is clamped to
+``min(block_n, n)`` below, so a caller whose batch is smaller than its
+requested block still lowers — but the epoch drivers
+(:mod:`repro.codegen.epochs`) additionally floor their power-of-two batch
+padding at ``max(8, block_n)``, so generated kernels never rely on this
+clamp and every grid covers at least one full block.
 """
 from __future__ import annotations
 

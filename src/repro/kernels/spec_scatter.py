@@ -15,6 +15,14 @@ back — the scalar-prefetched index drives the row selection, and the
 read-modify-write chain through VMEM keeps same-row runs of the sorted
 requests coherent.  ``n`` not divisible by ``block_n`` pads the request
 vector with poison (contributes nothing, by construction).
+
+Ragged-``n`` contract with the codegen backend: ``block_n`` is clamped to
+``min(block_n, n)`` below, but the epoch drivers
+(:mod:`repro.codegen.epochs`) floor their power-of-two batch padding at
+``max(8, block_n)``, so generated kernels hand this kernel full blocks; a
+poisoned (``-1``) slot — pad, dropped store, or WAW-superseded write —
+reads and re-writes row 0's slice unchanged (contribution is zeroed), so
+over-padding is safe, not just tolerated.
 """
 from __future__ import annotations
 

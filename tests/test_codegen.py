@@ -103,21 +103,55 @@ def test_table1_codegen_matches_machine_counts(name):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.parametrize("cu_mode", ["state-machine", "vector"])
 @pytest.mark.parametrize("name", sorted(ALL))
-def test_table1_jax_matches_interp(name):
+def test_table1_jax_matches_interp(name, cu_mode):
     case = ALL[name](**SMALL[name])
     comp = pipeline.compile_spec(case.fn, case.decoupled)
     ref = _interp_ref(case)
     mem = {k: v.copy() for k, v in case.memory.items()}
     # interpret=True pins Pallas interpret mode per call (CI has no TPU);
     # this is the explicit-kwarg path through kernels/backend.py
-    r = codegen.run(comp, mem, case.params, target="jax", interpret=True)
-    _assert_exact(ref, mem, f"{name}/spec/jax")
+    r = codegen.run(comp, mem, case.params, target="jax", interpret=True,
+                    cu_mode=cu_mode)
+    _assert_exact(ref, mem, f"{name}/spec/jax/{cu_mode}")
     assert r.target_used == "jax"
+    # every table1 SPEC CU is iteration-uniform: a pinned mode must run
+    assert r.cu_mode == cu_mode, r.vector_reason
     # the DU really ran on the kernel layer
     assert r.stats["gather_calls"] > 0
     assert r.stats["scatter_calls"] > 0
     assert r.stats["ld_leftover"] == 0 and r.stats["st_leftover"] == 0
+
+
+@pytest.mark.parametrize("cu_mode", ["state-machine", "vector"])
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_table1_numpy_cu_mode_matrix(name, cu_mode):
+    """Both CU modes, pinned, on every table1 SPEC kernel (numpy)."""
+    case = ALL[name]()
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    ref = _interp_ref(case)
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    r = codegen.run(comp, mem, case.params, target="numpy", cu_mode=cu_mode)
+    _assert_exact(ref, mem, f"{name}/spec/numpy/{cu_mode}")
+    assert r.target_used == "numpy" and r.cu_mode == cu_mode, \
+        r.vector_reason
+
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_vector_stats_match_state_machine(name):
+    """The vectorised CU retires exactly the state machine's traffic:
+    same commits, poisons, consumes, and leftover counts."""
+    case = ALL[name]()
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    runs = {}
+    for cu_mode in ("state-machine", "vector"):
+        mem = {k: v.copy() for k, v in case.memory.items()}
+        runs[cu_mode] = codegen.run(comp, mem, case.params, target="numpy",
+                                    cu_mode=cu_mode).stats
+    for key in ("stores_committed", "stores_poisoned", "loads_consumed",
+                "ld_leftover", "st_leftover"):
+        assert runs["vector"][key] == runs["state-machine"][key], key
 
 
 def test_table1_jax_dae_falls_back_exact():
@@ -140,9 +174,16 @@ def _randprog_cases():
     return [base + k for k in range(32)]
 
 
-@pytest.mark.parametrize("target", ["numpy", "jax"])
-def test_randprog_sweep_matches_interp(target):
+@pytest.mark.parametrize("leg", ["numpy", "numpy-vector", "jax"])
+def test_randprog_sweep_matches_interp(leg):
+    target = "numpy" if leg.startswith("numpy") else "jax"
+    kw = {}
+    if leg == "numpy-vector":
+        kw["cu_mode"] = "vector"  # pinned: non-uniform CUs go coupled
+    if target == "jax":
+        kw["interpret"] = True
     modes = {"numpy": 0, "jax": 0, "coupled": 0}
+    cu_modes = {"vector": 0, "state-machine": 0, None: 0}
     for seed in _randprog_cases():
         g = randprog.generate(seed % (2 ** 31))
         for pname, cf in COMPILERS.items():
@@ -150,13 +191,23 @@ def test_randprog_sweep_matches_interp(target):
             ref = {k: v.copy() for k, v in g.memory.items()}
             interp.run(g.fn, ref)
             mem = {k: v.copy() for k, v in g.memory.items()}
-            kw = {"interpret": True} if target == "jax" else {}
             r = codegen.run(comp, mem, target=target, **kw)
             modes[r.target_used] += 1
-            _assert_exact(ref, mem, f"randprog{seed}/{pname}/{target}")
-    # the sweep must exercise both the generated path and the fallback
+            cu_modes[r.cu_mode] += 1
+            _assert_exact(ref, mem, f"randprog{seed}/{pname}/{leg}")
+    # every leg must exercise the generated path and the coupled fallback
     assert modes[target] > 0, modes
     assert modes["coupled"] > 0, modes
+    if leg == "numpy":
+        # auto keeps the state machine on the numpy target
+        assert cu_modes["state-machine"] > 0 and cu_modes["vector"] == 0
+    elif leg == "numpy-vector":
+        assert cu_modes["vector"] > 0 and cu_modes["state-machine"] == 0
+    else:
+        # jax auto: uniform CUs vectorise, steered-poison CUs keep the
+        # state machine — the sweep must hit both
+        assert cu_modes["vector"] > 0 and cu_modes["state-machine"] > 0, \
+            cu_modes
 
 
 # ---------------------------------------------------------------------------
@@ -265,6 +316,343 @@ def test_unknown_op_refused_loudly():
     # non-strict: the coupled interpreter refuses too — never silent
     with pytest.raises(codegen.CodegenError, match="frobnicate"):
         codegen.run(comp, mem, target="numpy")
+
+
+# ---------------------------------------------------------------------------
+# vectorised CU: uniformity classifier, stall fallback, memo identity
+# ---------------------------------------------------------------------------
+
+
+def _uniform_reason(fn):
+    loops, why = codegen.analysis.uniform_loops(fn)
+    assert loops is None
+    return why
+
+
+def test_uniform_refuses_steered_poison():
+    f = Function("steered")
+    f.array("A", 8)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(8, "N"))
+    b.body.append(Instr("consume_ld", "av", (), "A", {}))
+    b.body.append(Instr("poison_st", None, (), "A",
+                        {"poison": True, "pred_reg": "steer.x"}))
+    b.br(nest.latch)
+    nest.finish()
+    assert "steered poison" in _uniform_reason(f)
+    assert codegen.emit_source(f, "cu-vector") is None
+
+
+def test_uniform_refuses_unbalanced_store_slots():
+    f = Function("unbal")
+    f.array("A", 8)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(8, "N"))
+    b.body.append(Instr("consume_ld", "av", (), "A", {}))
+    b.bin("p", "<", "av", nest.const(3, "T"))
+    b.cbr("p", "take", nest.latch)   # fall-through path consumes no slot
+    t = f.block("take")
+    t.body.append(Instr("produce_st", None, ("av",), "A", {}))
+    t.br(nest.latch)
+    nest.finish()
+    assert "not iteration-uniform" in _uniform_reason(f)
+
+
+def test_uniform_refuses_local_load_store_dependence():
+    f = Function("locdep")
+    f.array("A", 8)
+    f.array("L", 8)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(8, "N"))
+    b.body.append(Instr("consume_ld", "av", (), "A", {}))
+    b.load("lv", "L", "i")
+    b.bin("s", "+", "lv", "av")
+    b.store("L", "i", "s")           # L loaded AND stored in the loop
+    b.body.append(Instr("produce_st", None, ("s",), "A", {}))
+    b.br(nest.latch)
+    nest.finish()
+    assert "both loaded and stored" in _uniform_reason(f)
+
+
+def test_uniform_refuses_loop_carried_value():
+    f = Function("carried")
+    f.array("A", 8)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(8, "N"))
+    b.body.append(Instr("consume_ld", "av", (), "A", {}))
+    b.body.append(Instr("produce_st", None, ("av",), "A", {}))
+    b.br(nest.latch)
+    nest.finish()
+    # graft a second loop-carried phi onto the header: an accumulator
+    f.blocks["header"].phi("acc", [("entry", "zero"), ("latch", "av")])
+    assert "non-induction loop phi" in _uniform_reason(f)
+
+
+def test_uniform_refuses_dae_op_outside_innermost_loop():
+    f = Function("outside")
+    f.array("A", 8)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(8, "N"))
+    b.bin("t", "+", "i", "one")
+    b.br(nest.latch)
+    nest.finish()
+    f.blocks["entry"].body.append(Instr("consume_ld", "av", (), "A", {}))
+    assert "outside any iteration-uniform" in _uniform_reason(f)
+
+
+def test_vector_stall_falls_back_to_state_machine():
+    """A same-iteration committed RAW (store then aliasing load) passes
+    the static classifier but stalls the optimistic epoch at runtime:
+    the run must retry on the state machine and stay exact."""
+    f = Function("rawstall")
+    f.array("A", 16)
+    f.array("idx", 16)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(16, "N"))
+    b.load("j", "idx", "i")
+    b.bin("v", "+", "j", "one")
+    b.store("A", "j", "v")
+    b.load("av", "A", "j")           # reads the store of this iteration
+    b.bin("w", "+", "av", "one")
+    b.store("A", "i", "w")
+    b.br(nest.latch)
+    nest.finish()
+    rng = np.random.default_rng(5)
+    mem0 = {"A": rng.integers(0, 9, 16).astype(np.int64),
+            "idx": rng.integers(0, 16, 16).astype(np.int64)}
+    comp = pipeline.compile_spec(f, {"A"})
+    assert codegen.analyze(comp).vectorizable  # statically uniform...
+    ref = {k: v.copy() for k, v in mem0.items()}
+    interp.run(f, ref)
+    mem = {k: v.copy() for k, v in mem0.items()}
+    r = codegen.run(comp, mem, target="jax", interpret=True)  # jax auto
+    _assert_exact(ref, mem, "rawstall/auto")
+    assert r.cu_mode == "state-machine"      # ...but stalls dynamically
+    assert "stalled" in r.vector_reason
+    # a pinned vector request degrades to the coupled fallback instead
+    mem = {k: v.copy() for k, v in mem0.items()}
+    r = codegen.run(comp, mem, target="numpy", cu_mode="vector")
+    _assert_exact(ref, mem, "rawstall/pinned-vector")
+    assert r.fell_back and "stalled" in r.fallback_reason
+
+
+def test_vector_local_store_and_select_with_epoch_cuts():
+    """Local-array stores inside a vectorised loop are applied only for
+    the committed epoch prefix (the optimistic cut must slice them), and
+    `select` lowers to a lane-wise where; repeated indices force real
+    committed-RAW cuts mid-window."""
+    f = Function("locsel")
+    f.array("A", 8)
+    f.array("idx", 64)
+    f.array("L", 64)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(64, "N"))
+    b.load("j", "idx", "i")
+    b.load("av", "A", "j")               # decoupled load @ idx[i]
+    b.bin("p", "<", "av", nest.const(40, "T"))
+    b.bin("v", "+", "av", nest.const(3, "C3"))
+    b.select("s", "p", "v", "av")
+    b.store("A", "j", "s")               # decoupled store @ idx[i]
+    b.store("L", "i", "s")               # CU-local store, one site
+    b.br(nest.latch)
+    nest.finish()
+    rng = np.random.default_rng(11)
+    mem0 = {"A": rng.integers(0, 20, 8).astype(np.int64),
+            "idx": rng.integers(0, 8, 64).astype(np.int64),
+            "L": np.zeros(64, np.int64)}
+    comp = pipeline.compile_spec(f, {"A"})
+    ref = {k: v.copy() for k, v in mem0.items()}
+    interp.run(f, ref)
+    for target in ("numpy", "jax"):
+        mem = {k: v.copy() for k, v in mem0.items()}
+        kw = {"interpret": True} if target == "jax" else {}
+        r = codegen.run(comp, mem, target=target, cu_mode="vector", **kw)
+        _assert_exact(ref, mem, f"locsel/{target}")
+        assert r.cu_mode == "vector", r.vector_reason
+
+
+def test_vector_lane_overflow_falls_back_exact():
+    """Intermediates that overflow int64 lanes must raise (and fall back
+    to the state machine's unbounded Python ints), never commit wrapped
+    values — av**4 at av=2**20 wraps int64 but the committed result
+    (mod-reduced) is small and must stay exact."""
+    f = Function("bigmul")
+    f.array("A", 4)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(4, "N"))
+    b.load("av", "A", "i")
+    b.bin("s1", "*", "av", "av")
+    b.bin("s2", "*", "s1", "s1")
+    b.bin("r", "%", "s2", nest.const(97, "P"))
+    b.store("A", "i", "r")
+    b.br(nest.latch)
+    nest.finish()
+    mem0 = {"A": np.full(4, 2 ** 20, np.int64)}
+    comp = pipeline.compile_spec(f, {"A"})
+    assert codegen.analyze(comp).vectorizable
+    ref = {k: v.copy() for k, v in mem0.items()}
+    interp.run(f, ref)
+    for target, kw in (("numpy", {"cu_mode": "vector"}),
+                       ("jax", {"interpret": True})):
+        mem = {k: v.copy() for k, v in mem0.items()}
+        r = codegen.run(comp, mem, target=target, **kw)
+        _assert_exact(ref, mem, f"bigmul/{target}")
+        assert r.cu_mode == "state-machine" or r.fell_back
+        reason = r.vector_reason or r.fallback_reason
+        assert "overflow" in reason
+
+
+def test_vector_store_underrun_is_explicit():
+    """A CU producing more store slots than the AGU requested must
+    degrade with a CodegenError-driven fallback on the vector path too
+    (regression: the violation scan used to IndexError past the stream)."""
+    agu = Function("ur.agu")
+    agu.array("A", 32)
+    na = LoopNest(agu)
+    b = na.enter("i", na.const(16, "N"))
+    b.body.append(Instr("send_ld", None, ("i",), "A", {"sync": False}))
+    b.bin("h", "%", "i", na.const(2, "H"))
+    b.cbr("h", "st", na.latch)
+    s = agu.block("st")
+    s.body.append(Instr("send_st", None, ("i",), "A", {}))
+    s.br(na.latch)
+    na.finish()
+
+    cu = Function("ur.cu")
+    cu.array("A", 32)
+    nc = LoopNest(cu)
+    b = nc.enter("i", nc.const(16, "N"))
+    b.body.append(Instr("consume_ld", "av", (), "A", {}))
+    b.bin("v", "+", "av", "one")
+    b.body.append(Instr("produce_st", None, ("v",), "A", {}))
+    b.br(nc.latch)
+    nc.finish()
+    comp = pipeline.CompiledDAE(agu, cu, decoupled={"A"})
+    mem = {"A": np.arange(32, dtype=np.int64)}
+    r = codegen.run(comp, mem, target="numpy", cu_mode="vector")
+    assert r.fell_back and "underrun" in r.fallback_reason
+
+
+def test_vector_dae_free_loop_epochs_stay_bounded():
+    """A pure-compute loop can pass the uniformity check with zero
+    request counts: epoch planning must still cap the window (lane
+    allocation bounded by MAX_BATCH, not by the trip count)."""
+    from repro.codegen.epochs import MAX_BATCH, plan_iters
+    assert plan_iters(10 ** 9, {}, {}) == MAX_BATCH
+    f = Function("pureinit")
+    f.array("A", 8)
+    f.array("L", 2048)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(2048, "N"))
+    b.bin("v", "*", "i", nest.const(3, "C"))
+    b.store("L", "i", "v")
+    b.br(nest.latch)
+    nest.finish()
+    mem0 = {"A": np.arange(8, dtype=np.int64),
+            "L": np.zeros(2048, np.int64)}
+    comp = pipeline.compile_spec(f, {"A"})
+    ref = {k: v.copy() for k, v in mem0.items()}
+    interp.run(f, ref)
+    mem = {k: v.copy() for k, v in mem0.items()}
+    r = codegen.run(comp, mem, target="numpy", cu_mode="vector")
+    _assert_exact(ref, mem, "pureinit/vector")
+    assert r.cu_mode == "vector", r.vector_reason
+
+
+def test_analyze_memo_tracks_slice_identity():
+    """Rewriting a CompiledDAE's slices must invalidate the memoised
+    classification (the old instance-keyed memo served stale results)."""
+    case = ALL["spmv"]()
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    info1 = codegen.analyze(comp)
+    assert codegen.analyze(comp) is info1            # memo hit
+    other = pipeline.compile_dae(case.fn, case.decoupled)
+    comp.agu, comp.cu = other.agu, other.cu          # slices rewritten
+    info2 = codegen.analyze(comp)
+    assert info2 is not info1
+    assert info2.agu_class == codegen.AGU_VALUE_DEP  # fresh, not stale
+    assert codegen.analyze(comp) is info2            # re-memoised
+
+
+def test_jax_block_n_above_bucket_floor():
+    """block_n larger than the old fixed bucket floor of 8: the batch
+    padding must clamp up so the kernels never see a grid smaller than
+    one block (regression for the `_bucket` floor)."""
+    from repro.codegen.epochs import bucket
+    assert bucket(3, 32) == 32
+    assert bucket(40, 32) == 64
+    assert bucket(3) == 8 and bucket(40) == 64
+    case = ALL["spmv"](n=12)
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    ref = _interp_ref(case)
+    for cu_mode in ("state-machine", "vector"):
+        mem = {k: v.copy() for k, v in case.memory.items()}
+        r = codegen.run(comp, mem, case.params, target="jax",
+                        interpret=True, block_n=32, cu_mode=cu_mode)
+        _assert_exact(ref, mem, f"block_n32/{cu_mode}")
+        assert r.target_used == "jax" and r.cu_mode == cu_mode
+
+
+# ---------------------------------------------------------------------------
+# leftover-stream contract: speculative over-issue past CU exit
+# ---------------------------------------------------------------------------
+
+
+def _over_issue_pair(n_agu=24, n_cu=15):
+    """Hand-built SPEC-shaped pair where the AGU runs past the CU's exit:
+    the AGU fires ``n_agu`` load+store requests, the CU consumes only
+    ``n_cu`` — the surplus is *legitimate* speculative over-issue and
+    must surface as nonzero ld/st leftovers, not an error."""
+    agu = Function("ov.agu")
+    agu.array("A", 32)
+    na = LoopNest(agu)
+    b = na.enter("i", na.const(n_agu, "N"))
+    b.body.append(Instr("send_ld", None, ("i",), "A", {"sync": False}))
+    b.body.append(Instr("send_st", None, ("i",), "A", {}))
+    b.br(na.latch)
+    na.finish()
+
+    cu = Function("ov.cu")
+    cu.array("A", 32)
+    nc = LoopNest(cu)
+    b = nc.enter("i", nc.const(n_cu, "K"))
+    b.body.append(Instr("consume_ld", "av", (), "A", {}))
+    b.bin("p", "%", "av", nc.const(3, "M"))
+    b.bin("v", "+", "av", "one")
+    b.cbr("p", "take", "pz")
+    t = cu.block("take")
+    t.body.append(Instr("produce_st", None, ("v",), "A", {}))
+    t.br(nc.latch)
+    z = cu.block("pz")
+    z.synthetic = True
+    z.body.append(Instr("poison_st", None, (), "A", {"poison": True}))
+    z.br(nc.latch)
+    nc.finish()
+    comp = pipeline.CompiledDAE(agu, cu, decoupled={"A"})
+    mem = {"A": np.arange(32, dtype=np.int64)}
+    return comp, mem, n_agu - n_cu
+
+
+@pytest.mark.parametrize("target", ["numpy", "jax"])
+def test_leftover_streams_nonzero_on_over_issue(target):
+    comp, mem0, surplus = _over_issue_pair()
+    results = {}
+    for cu_mode in ("state-machine", "vector"):
+        mem = {k: v.copy() for k, v in mem0.items()}
+        kw = {"interpret": True} if target == "jax" else {}
+        r = codegen.run(comp, mem, target=target, cu_mode=cu_mode, **kw)
+        assert r.target_used == target and r.cu_mode == cu_mode, \
+            (r.fallback_reason, r.vector_reason)
+        results[cu_mode] = (r.stats, mem)
+    sm, vec = results["state-machine"], results["vector"]
+    # over-issue past CU exit: the AGU's surplus requests stay unserved
+    assert sm[0]["ld_leftover"] == surplus > 0
+    assert sm[0]["st_leftover"] == surplus
+    # the vectorised path must report the identical leftover contract
+    for key in ("ld_leftover", "st_leftover", "stores_committed",
+                "stores_poisoned", "loads_consumed"):
+        assert vec[0][key] == sm[0][key], key
+    _assert_exact(sm[1], vec[1], f"over-issue/{target}")
 
 
 def test_sync_readonly_agu_streams():
@@ -526,3 +914,110 @@ def test_emission_refuses_wrong_slice_kind():
     # emit dangling references
     assert codegen.emit_source(_golden_cu(), "agu-stream") is None
     assert codegen.emit_source(_golden_agu(), "cu-numpy") is None
+    assert codegen.emit_source(_golden_agu(), "cu-vector") is None
+
+
+def _golden_vec_cu():
+    f = Function("g.vcu")
+    f.array("A", 8)
+    f.array("w", 8)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(8, "N"))
+    b.body.append(Instr("consume_ld", "av", (), "A", {}))
+    b.bin("p", "<", "av", nest.const(5, "T"))
+    b.load("wv", "w", "i")
+    b.bin("v1", "+", "av", "wv")
+    b.cbr("p", "take", "pz")
+    t = f.block("take")
+    t.body.append(Instr("produce_st", None, ("v1",), "A", {}))
+    t.br(nest.latch)
+    z = f.block("pz")
+    z.synthetic = True
+    z.body.append(Instr("poison_st", None, (), "A", {"poison": True}))
+    z.br(nest.latch)
+    nest.finish()
+    return f
+
+
+GOLDEN_CU_VECTOR = '''\
+def _run(memory, _params, _drv, _max_steps):
+    _regs = {}
+    steps = 0
+    _loc_v0 = memory['w'].copy()
+    _cast_v0 = memory['w'].dtype.type
+    _hi_v0 = len(_loc_v0) - 1
+    v1 = _params.get('N')
+    v2 = _params.get('T')
+    v3 = _params.get('av')
+    v4 = _params.get('c')
+    v5 = _params.get('i')
+    v6 = _params.get('i_next')
+    v7 = _params.get('one')
+    v8 = _params.get('p')
+    v9 = _params.get('v1')
+    v10 = _params.get('wv')
+    v11 = _params.get('zero')
+    _blk = 0
+    _prev = -1
+    while True:
+        if _blk == 0:
+            steps += 4
+            if steps > _max_steps:
+                raise _CodegenError('generated kernel step budget exceeded')
+            v11 = 0
+            v7 = 1
+            v1 = 8
+            v2 = 5
+            _prev = 0
+            _blk = 1
+        elif _blk == 1:
+            if _prev == 0:
+                _iv0 = v11
+            else:
+                _phi_err('i', 'header', _prev)
+            _T = v1 - _iv0
+            if _T < 0: _T = 0
+            _t0 = 0
+            while _t0 < _T:
+                _m = _drv.plan(0, _T - _t0)
+                _ld = _drv.gather(0, _m)
+                v5 = _iv0 + _t0 + _np.arange(_m)
+                _sv_v12_0 = 0
+                _sp_v12_0 = False
+                _p0 = True
+                v3 = _ld['A'][0::1]
+                v8 = _vlt(v3, v2)
+                v10 = _vload(_loc_v0, v5, _hi_v0)
+                v9 = _vadd(v3, v10)
+                _p1 = _band(_p0, v8)
+                _sv_v12_0 = _vwhere(_p1, v9, _sv_v12_0)
+                _p2 = _bnot(_p0, v8)
+                _sp_v12_0 = _sp_v12_0 | _p2
+                _p3 = _p1
+                _p3 = _p3 | _p2
+                v6 = _vadd(v5, v7)
+                _m2 = _drv.commit(0, _m, {'A': ((_sv_v12_0,), (_sp_v12_0,))})
+                _t0 += _m2
+                steps += _m2 * 7
+                if steps > _max_steps:
+                    raise _CodegenError('generated kernel step budget exceeded')
+            v5 = _iv0 + _T
+            _prev = 1
+            _blk = 6
+        elif _blk == 6:
+            _stats = _drv.stats()
+            _stats['locals'] = {'w': _loc_v0}
+            return _stats
+        else:
+            raise RuntimeError(f'codegen: bad block id {_blk}')'''
+
+
+def test_golden_cu_vector_emission():
+    """The vectorised CU text is pinned exactly: the bound test collapses
+    to `_T`, `consume_ld` is a strided view of one gather, the cbr is
+    predicate arithmetic, and the poison slot is a mask lane."""
+    assert codegen.emit_source(_golden_vec_cu(), "cu-vector") == \
+        GOLDEN_CU_VECTOR
+    # emission is deterministic
+    assert codegen.emit_source(_golden_vec_cu(), "cu-vector") == \
+        codegen.emit_source(_golden_vec_cu(), "cu-vector")
