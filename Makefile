@@ -8,6 +8,9 @@
 #                      `git show`, so a refreshed working copy can't gate
 #                      against itself; fails on >25% slowdown, tune with
 #                      TOLERANCE=0.6 on noisy boxes)
+#   make chaos       — resilience gate: armed-but-quiet overhead <2% on
+#                      the codegen legs + 4-seed fault-injection soak
+#                      (CI tier: chaos)
 #   make bench       — full harness, refreshes BENCH_machine.json
 
 PY        ?= python
@@ -15,7 +18,7 @@ TOLERANCE ?= 0.25
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: check bench-quick bench bench-gate lint test
+.PHONY: check bench-quick bench bench-gate chaos lint test
 
 check test:
 	$(PY) -m pytest -x -q
@@ -35,7 +38,11 @@ bench-gate:
 	$(PY) -m benchmarks.run --quick --json BENCH_gate.json
 	git show HEAD:BENCH_quick.json > BENCH_gate_baseline.json
 	$(PY) -m benchmarks.compare BENCH_gate.json \
-		--baseline BENCH_gate_baseline.json --tolerance $(TOLERANCE)
+		--baseline BENCH_gate_baseline.json --tolerance $(TOLERANCE) \
+		--require dae_table1,dae_codegen
+
+chaos:
+	$(PY) -m benchmarks.dae_chaos --soak 4
 
 bench:
 	$(PY) -m benchmarks.run --json BENCH_machine.json

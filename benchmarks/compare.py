@@ -4,7 +4,7 @@ committed baseline.
 Usage::
 
     python -m benchmarks.compare NEW.json [--baseline BENCH_machine.json]
-                                 [--tolerance 0.25]
+                                 [--tolerance 0.25] [--require A,B]
 
 Rows are matched by ``name`` and compared on ``us_per_call``; a section
 slower than ``baseline * (1 + tolerance)`` is a regression and the exit
@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 from typing import Dict, List, Tuple
 
 
@@ -30,11 +31,19 @@ def load_rows(path: str) -> Dict[str, float]:
     out: Dict[str, float] = {}
     for row in data:
         try:
-            out[row["name"]] = float(row["us_per_call"])
+            val = float(row["us_per_call"])
         except (TypeError, KeyError, ValueError):
             raise SystemExit(
                 f"{path}: malformed row {row!r} "
                 f"(need name + numeric us_per_call)") from None
+        if not math.isfinite(val):
+            # NaN compares False against every threshold, so without
+            # this check a crashed section would silently pass the gate
+            raise SystemExit(
+                f"{path}: non-finite us_per_call for section "
+                f"{row.get('name')!r} — the benchmark likely crashed "
+                f"mid-run; regenerate the JSON")
+        out[row["name"]] = val
     return out
 
 
@@ -75,12 +84,25 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed slowdown fraction before failing "
                          "(default: 0.25 = 25%%)")
+    ap.add_argument("--require", default=None, metavar="A,B",
+                    help="comma-separated section names that must be "
+                         "present in BOTH files — a silently dropped "
+                         "section fails the gate instead of being skipped")
     args = ap.parse_args(argv)
     if args.tolerance < 0:
         raise SystemExit("--tolerance must be >= 0")
 
     new = load_rows(args.new)
     base = load_rows(args.baseline)
+    if args.require:
+        names = [s.strip() for s in args.require.split(",") if s.strip()]
+        for path, rows in ((args.new, new), (args.baseline, base)):
+            missing = sorted(set(names) - set(rows))
+            if missing:
+                raise SystemExit(
+                    f"{path}: required section(s) missing: "
+                    f"{', '.join(missing)} — the benchmark that produces "
+                    f"them did not run (or was renamed)")
     lines, regressions = compare(new, base, args.tolerance)
     print(f"bench gate: {args.new} vs {args.baseline} "
           f"(tolerance {args.tolerance:.0%})")

@@ -169,6 +169,18 @@ def _run_sections(args) -> None:
               if "jaxv_x" in r]
     rows.append(("dae_codegen", uscg, ",".join(parts)))
 
+    print()
+    print("=" * 72)
+    print("Resilience — armed-but-quiet fault-plane overhead on the "
+          "codegen legs")
+    print("=" * 72)
+    from benchmarks import dae_chaos
+    # quick trades statistical margin for wall time; the hard <2% gate
+    # runs in the dedicated `make chaos` leg at the full budget
+    ch, usch = _timed(lambda: dae_chaos.main(
+        repeats=8 if quick else 40, budget_s=0.5 if quick else 4.0))
+    rows.append(("dae_chaos", usch, ch))
+
     if not quick:
         # the paper's technique inside the LM framework: MoE dispatch A/B
         print()

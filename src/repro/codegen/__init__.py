@@ -44,10 +44,13 @@ raises instead.  Every path is held bit-identical to
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from ..resilience import faults
+from ..resilience.faults import FaultError
+from ..resilience.ladder import FailureEvent, Ladder
 from .analysis import (AGU_PURE, AGU_SYNC_SAFE, AGU_VALUE_DEP, CodegenError,
                        SliceAnalysis, UniformLoop)
 from .analysis import analyze as _analyze_slices
@@ -55,9 +58,9 @@ from .emit import compile_mode, emit_source
 from .streams import Streams
 
 __all__ = ["AGU_PURE", "AGU_SYNC_SAFE", "AGU_VALUE_DEP", "CU_MODES",
-           "CodegenError", "CodegenRun", "SliceAnalysis", "Streams",
-           "TARGETS", "UniformLoop", "analyze", "emit_source", "lower",
-           "run"]
+           "CodegenError", "CodegenRun", "FailureEvent", "SliceAnalysis",
+           "Streams", "TARGETS", "UniformLoop", "analyze", "emit_source",
+           "lower", "run"]
 
 TARGETS = ("numpy", "jax")
 #: how the CU half may execute: epoch-batched array ops for
@@ -102,6 +105,10 @@ class CodegenRun:
     #: why the vectorised CU did not run (None when it did, or when the
     #: whole target fell back before the CU mode was chosen)
     vector_reason: Optional[str] = None
+    #: every retry/descend the degradation ladder observed on this run
+    #: (:class:`~repro.resilience.ladder.FailureEvent`); empty on a
+    #: clean first-rung success
+    events: List[FailureEvent] = field(default_factory=list)
 
     @property
     def fell_back(self) -> bool:
@@ -132,7 +139,8 @@ def run(compiled, memory: Dict[str, np.ndarray],
         params: Optional[Dict[str, Any]] = None, target: str = "numpy", *,
         strict: bool = False, interpret: Optional[bool] = None,
         block_n: int = 8, cu_mode: str = "auto",
-        max_steps: int = 2_000_000) -> CodegenRun:
+        max_steps: int = 2_000_000, max_retries: int = 1,
+        backoff: float = 0.0) -> CodegenRun:
     """Execute ``compiled`` against ``memory`` (mutated in place).
 
     Memory contract matches :func:`repro.core.machine.run_dae`: decoupled
@@ -153,9 +161,17 @@ def run(compiled, memory: Dict[str, np.ndarray],
     request that cannot run falls back to the coupled interpreter like
     any other refusal).
 
-    A target that cannot run (see module docstring) falls back to the
-    coupled interpreter unless ``strict=True``, in which case
-    :class:`CodegenError` is raised with ``memory`` untouched.
+    A target that cannot run (see module docstring) descends the
+    degradation ladder (:mod:`repro.resilience.ladder`) to the coupled
+    interpreter unless ``strict=True``, in which case
+    :class:`CodegenError` is raised with ``memory`` untouched.  A
+    *transient* failure (:class:`~repro.resilience.faults.FaultError`:
+    an injected runtime death or detected data corruption from an armed
+    :class:`~repro.resilience.faults.FaultPlan`) is first retried on the
+    same rung up to ``max_retries`` times (exponential ``backoff``
+    seconds between tries); deterministic refusals descend immediately,
+    so an unarmed run behaves exactly as before.  Every retry/descend is
+    recorded on :attr:`CodegenRun.events`.
     """
     if target not in TARGETS:
         raise ValueError(f"unknown codegen target {target!r}")
@@ -163,61 +179,95 @@ def run(compiled, memory: Dict[str, np.ndarray],
         raise ValueError(f"unknown cu_mode {cu_mode!r}")
     info = analyze(compiled)
     params = dict(params or {})
-    reason = info.stream_reason
-    streams: Optional[Streams] = None
-    stats: Dict[str, Any] = {}
-    used: Optional[str] = None
-    used_cu: Optional[str] = None
-    vector_reason: Optional[str] = None
+    stream_reason = info.stream_reason
 
-    if reason is None:
-        try:
+    if strict and stream_reason is not None:
+        raise CodegenError(
+            f"codegen target {target!r} unavailable: {stream_reason}")
+
+    # rungs for this request: a pinned cu_mode skips the other CU mode
+    # (a pinned vector request that fails goes straight to coupled, as
+    # before); strict removes the coupled rung entirely
+    want_vector = (cu_mode == "vector"
+                   or (cu_mode == "auto" and target == "jax"))
+    rungs: List[str] = []
+    if stream_reason is None:
+        if want_vector:
+            rungs.append("vector")
+        if cu_mode != "vector":
+            rungs.append("state-machine")
+    if not strict:
+        rungs.append("coupled")
+
+    streams_box: Dict[str, Streams] = {}
+
+    def build_streams() -> Streams:
+        faults.inject("codegen.streams")
+        if "s" not in streams_box:
             agu_make = compile_mode(compiled.agu, "agu-stream")
             if agu_make is None:
                 raise CodegenError("AGU slice not lowerable")
-            streams = agu_make(memory, dict(params), max_steps)
+            streams_box["s"] = agu_make(memory, dict(params), max_steps)
+        return streams_box["s"]
 
-            want_vector = (cu_mode == "vector"
-                           or (cu_mode == "auto" and target == "jax"))
-            if want_vector:
-                from .vector import run_vector
-                try:
-                    stats = run_vector(compiled, memory, params, streams,
-                                       info, target, interpret=interpret,
-                                       block_n=block_n, max_steps=max_steps)
-                    used, used_cu = target, "vector"
-                except CodegenError as e:
-                    if cu_mode == "vector":
-                        raise
-                    vector_reason = str(e)  # fall through to state machine
+    def attempt(rung: str) -> Dict[str, Any]:
+        if rung == "coupled":
+            from .fallback import run_coupled
+            decoupled = getattr(compiled, "decoupled", None) or info.decoupled
+            return run_coupled(compiled, memory, set(decoupled), params,
+                               max_steps)
+        streams = build_streams()
+        if rung == "vector":
+            from .vector import run_vector
+            return run_vector(compiled, memory, params, streams, info,
+                              target, interpret=interpret, block_n=block_n,
+                              max_steps=max_steps)
+        if target == "numpy":
+            cu_make = compile_mode(compiled.cu, "cu-numpy")
+            if cu_make is None:
+                raise CodegenError("CU slice not lowerable")
+            return cu_make(memory, dict(params), streams.ld_clamped,
+                           streams.st_addrs, max_steps)
+        from .jax_backend import run_jax
+        return run_jax(compiled, memory, params, streams, info,
+                       interpret=interpret, block_n=block_n,
+                       max_steps=max_steps)
 
-            if used is None:
-                if target == "numpy":
-                    cu_make = compile_mode(compiled.cu, "cu-numpy")
-                    if cu_make is None:
-                        raise CodegenError("CU slice not lowerable")
-                    stats = cu_make(memory, dict(params), streams.ld_clamped,
-                                    streams.st_addrs, max_steps)
-                else:
-                    from .jax_backend import run_jax
-                    stats = run_jax(compiled, memory, params, streams, info,
-                                    interpret=interpret, block_n=block_n,
-                                    max_steps=max_steps)
-                used, used_cu = target, "state-machine"
-        except CodegenError as e:
-            reason = str(e)
-            used = used_cu = None
-
-    if used is None:
+    ladder = Ladder(rungs, max_retries=max_retries, backoff=backoff,
+                    catch=(CodegenError, FaultError))
+    if stream_reason is not None:
+        # the analysis already refused the generated path: record the
+        # descent so the run is observable even without an exception
+        ladder.events.append(FailureEvent(
+            site="", rung="analysis", cause=stream_reason, retries=0,
+            outcome="descend"))
+    try:
+        used, stats = ladder.run(attempt)
+    except FaultError as e:
+        raise CodegenError(
+            f"codegen target {target!r} unavailable: {e}") from e
+    except CodegenError as e:
         if strict:
             raise CodegenError(
-                f"codegen target {target!r} unavailable: {reason}")
-        from .fallback import run_coupled
-        decoupled = getattr(compiled, "decoupled", None) or info.decoupled
-        stats = run_coupled(compiled, memory, set(decoupled), params,
-                            max_steps)
-        used = "coupled"
+                f"codegen target {target!r} unavailable: {e}") from e
+        raise  # the coupled interpreter's own loud refusal — never silent
 
-    return CodegenRun(target, used, info, stats,
-                      reason if used == "coupled" else None, streams,
-                      used_cu, vector_reason)
+    used_cu = None if used == "coupled" else used
+    target_used = "coupled" if used == "coupled" else target
+
+    vector_reason: Optional[str] = None
+    if cu_mode == "auto":
+        for ev in ladder.events:
+            if ev.rung == "vector" and ev.outcome == "descend":
+                vector_reason = ev.cause
+    fallback_reason: Optional[str] = None
+    if used == "coupled":
+        if stream_reason is not None:
+            fallback_reason = stream_reason
+        else:
+            desc = [ev for ev in ladder.events if ev.outcome == "descend"]
+            fallback_reason = desc[-1].cause if desc else None
+
+    return CodegenRun(target, target_used, info, stats, fallback_reason,
+                      streams_box.get("s"), used_cu, vector_reason,
+                      ladder.events)

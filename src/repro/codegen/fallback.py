@@ -32,6 +32,7 @@ import numpy as np
 from ..core.interp import eval_binop
 from ..core.ir import Function
 from ..core.sim.base import POISON
+from ..resilience import faults
 from .analysis import CodegenError
 
 
@@ -199,9 +200,13 @@ def run_coupled(compiled, memory: Dict[str, np.ndarray],
     on private copies of the non-decoupled arrays.
     """
     params = dict(params or {})
+    faults.inject("codegen.coupled")
     chans = {a: _Chan(a, memory[a]) for a in sorted(decoupled)}
     agu_local = {a: memory[a].copy() for a in memory if a not in decoupled}
-    cu_local = {a: memory[a] for a in memory if a not in decoupled}
+    # the CU works on private copies too: a mid-run failure (deadlock,
+    # step budget, unknown op) after some local stores must leave the
+    # caller's memory untouched — write back only on success below
+    cu_local = {a: memory[a].copy() for a in memory if a not in decoupled}
     counter = [0]
 
     gens = [
@@ -229,6 +234,8 @@ def run_coupled(compiled, memory: Dict[str, np.ndarray],
 
     for a, ch in chans.items():
         memory[a][:] = ch.mem
+    for a, arr in cu_local.items():
+        memory[a][:] = arr
     return {
         "stores_committed": sum(c.committed for c in chans.values()),
         "stores_poisoned": sum(c.poisoned for c in chans.values()),

@@ -35,6 +35,8 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
+from ..resilience import faults
+from ..resilience.faults import FaultDetected
 from .analysis import CodegenError
 from .emit import compile_mode
 from .epochs import I32_MAX as _I32_MAX
@@ -63,6 +65,12 @@ class _ArrayDriver:
         self.dtype = mem.dtype
         self.hi = len(mem) - 1
         self.table = jnp.asarray(mem.astype(np.int32).reshape(-1, 1))
+        # shadow replica of the device table, kept only when the armed
+        # plan can silently corrupt data (see faults.CORRUPTION_SITES):
+        # exact by induction (only these flushes mutate the table), so
+        # any divergence is detected corruption.  None otherwise — the
+        # hot path keeps zero copies.
+        self.shadow = mem.astype(np.int32) if faults.corrupting() else None
         self.ld_clamped = streams.ld_clamped.get(name, [])
         self.ld_raw = streams.ld_raw.get(name, [])
         self.ld_pos = streams.ld_pos.get(name, [])
@@ -79,6 +87,7 @@ class _ArrayDriver:
     def flush(self, produced: list) -> None:
         """Apply ``produced`` (values / POISON sentinels) in commit order."""
         from ..core.sim.base import POISON
+        faults.inject("codegen.jax.flush")
         if not produced:
             return
         if self.fp + len(produced) > len(self.st_addrs):
@@ -131,12 +140,19 @@ class _ArrayDriver:
                                       interpret=self.interpret)
         self.gather_calls += 1
         self.scatter_calls += 1
+        if self.shadow is not None:
+            # flush splits batches on duplicate addresses, so zip order
+            # here is commit order
+            for a, v in zip(idx_list, val_list):
+                if a >= 0:
+                    self.shadow[a] = v
 
     # -- load refill ---------------------------------------------------------
     def refill(self, buf: deque) -> int:
         """Gather the next epoch of load values into ``buf``."""
         import jax.numpy as jnp
         from ..kernels.spec_gather import spec_gather
+        faults.inject("codegen.jax.refill")
         lds = self.ld_clamped
         if self.lp >= len(lds):
             return 0
@@ -156,7 +172,15 @@ class _ArrayDriver:
         vals = spec_gather(self.table, jnp.asarray(idx), block_d=1,
                            block_n=self.block_n, interpret=self.interpret)
         self.gather_calls += 1
-        buf.extend(int(x) for x in np.asarray(vals[:n, 0]))
+        got = np.asarray(vals[:n, 0])
+        if self.shadow is not None:
+            exp = self.shadow[np.asarray(take, dtype=np.int64)]
+            if not np.array_equal(got, exp):
+                raise FaultDetected(
+                    "codegen.jax.refill",
+                    f"gather verify failed @{self.name}: device rows "
+                    f"differ from shadow replica")
+        buf.extend(int(x) for x in got)
         self.lp = k
         return n
 
@@ -198,6 +222,19 @@ def run_jax(compiled, memory: Dict[str, np.ndarray],
                 f"remain (stream mismatch)")
     for a in dec:  # drain store values produced after the last consume
         drivers[a].flush(outs[a])
+
+    # integrity barrier: before the first write to caller memory, every
+    # device table must agree with its shadow replica (armed runs only —
+    # a scatter that dropped or corrupted committed stores is caught
+    # here at the latest, never committed)
+    for a in dec:
+        drv = drivers[a]
+        if drv.shadow is not None:
+            tab = np.asarray(drv.table[:, 0])
+            if not np.array_equal(tab, drv.shadow):
+                raise FaultDetected(
+                    "codegen.jax.commit",
+                    f"device table for {a} diverged from shadow replica")
 
     # every flush succeeded — only now touch the caller's memory (the CU
     # epilogue deliberately left its local-array mirrors in stats)

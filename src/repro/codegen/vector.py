@@ -46,6 +46,8 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from ..resilience import faults
+from ..resilience.faults import FaultDetected
 from .analysis import CodegenError, UniformLoop, uniform_loops
 from .epochs import (I32_MAX as _I32_MAX, I32_MIN as _I32_MIN, bucket,
                      first_violation, last_writer_keep, plan_iters)
@@ -337,6 +339,11 @@ class _VectorDriver:
         return out
 
     def commit(self, lid: int, m: int, stores) -> int:
+        # fault site: the driver dies at an epoch commit.  Raising here
+        # is containment-safe by construction — every prior epoch went
+        # to the private working copy / device table, and the caller's
+        # memory is only written after the whole run succeeds.
+        faults.inject("codegen.vector.epoch")
         ul = self.loops[lid]
         flat: Dict[str, tuple] = {}
         for a, (vals, pois) in stores.items():
@@ -385,6 +392,11 @@ class _VectorDriver:
                 self.lp[a] += m2 * k
                 self.consumed += m2 * k
         return m2
+
+    def verify(self) -> None:
+        """Integrity barrier before memory write-back (no-op unless a
+        fault plan is armed and the driver keeps an independent
+        replica)."""
 
     def stats(self) -> Dict[str, Any]:
         return {
@@ -444,7 +456,18 @@ class _JaxVectorDriver(_VectorDriver):
                            block_n=min(max(8, self.block_n), b),
                            interpret=self.interpret)
         self.gather_calls += 1
-        return np.asarray(vals[:n, 0]).astype(np.int64)
+        out = np.asarray(vals[:n, 0]).astype(np.int64)
+        if faults.corrupting():
+            # the host mirror is exact by induction — a gather that
+            # disagrees with it returned corrupted rows; catch it before
+            # the CU computes (and later commits) anything from it
+            exp = self.mirror[a][idx]
+            if not np.array_equal(out, exp):
+                raise FaultDetected(
+                    "codegen.vector.gather",
+                    f"gather verify failed @{a}: device rows differ from "
+                    f"host mirror")
+        return out
 
     def _scatter(self, a, addrs, vals, pois) -> None:
         import jax.numpy as jnp
@@ -475,6 +498,17 @@ class _JaxVectorDriver(_VectorDriver):
             block_n=min(max(8, self.block_n), b), interpret=self.interpret)
         self.scatter_calls += 1
         self.mirror[a][eff[keep]] = v64[keep]
+
+    def verify(self) -> None:
+        if not faults.corrupting():
+            return
+        for a in self.arrays:
+            tab = np.asarray(self.table[a][:, 0]).astype(np.int64)
+            if not np.array_equal(tab, self.mirror[a]):
+                raise FaultDetected(
+                    "codegen.vector.commit",
+                    f"device table for {a} diverged from host mirror "
+                    f"(a scatter dropped or corrupted committed stores)")
 
     def finalize(self, memory: Dict[str, np.ndarray]) -> None:
         for a in self.arrays:
@@ -523,7 +557,10 @@ def run_vector(compiled, memory: Dict[str, np.ndarray],
         drv = _NumpyVectorDriver(loops, streams, memory, dec)
 
     stats = cu_make(memory, dict(params), drv, max_steps)
-    # every epoch committed — only now touch the caller's memory
+    # every epoch committed and the integrity barrier passed — only now
+    # touch the caller's memory (verify() must precede the first write,
+    # or a detected fault would leave a partial commit behind)
+    drv.verify()
     for a, mirror in stats.pop("locals", {}).items():
         memory[a][:] = mirror
     drv.finalize(memory)

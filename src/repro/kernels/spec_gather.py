@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..resilience import faults
 from .backend import resolve_interpret
 
 
@@ -69,9 +70,22 @@ def spec_gather(table: jax.Array, idx: jax.Array, *, block_d: int = 512,
     see :func:`repro.kernels.backend.resolve_interpret`).  Resolution
     happens *outside* the jitted core so the env knob is read per call,
     not baked into the first trace.
+
+    Fault sites (active only under an armed
+    :class:`~repro.resilience.faults.FaultPlan`; one bool check when
+    unarmed): ``kernels.gather.allpoison`` poisons the whole request
+    batch before the kernel, ``kernels.gather.rows`` corrupts alternate
+    output rows after it.  Both are *detectable* corruptions — the
+    codegen drivers verify gathers against an independent host replica
+    and refuse to commit downstream values.
     """
-    return _spec_gather(table, idx, block_d=block_d, block_n=block_n,
-                        interpret=resolve_interpret(interpret))
+    if faults.ACTIVE and faults.fire("kernels.gather.allpoison"):
+        idx = jnp.full_like(idx, -1)
+    out = _spec_gather(table, idx, block_d=block_d, block_n=block_n,
+                       interpret=resolve_interpret(interpret))
+    if faults.ACTIVE and faults.fire("kernels.gather.rows"):
+        out = out.at[::2].add(jnp.ones((), out.dtype))
+    return out
 
 
 @functools.partial(jax.jit,

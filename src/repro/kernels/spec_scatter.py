@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..resilience import faults
 from .backend import resolve_interpret
 
 
@@ -70,7 +71,18 @@ def spec_scatter_add(table: jax.Array, idx: jax.Array, values: jax.Array, *,
     see :func:`repro.kernels.backend.resolve_interpret`).  Resolution
     happens *outside* the jitted core so the env knob is read per call,
     not baked into the first trace.
+
+    Fault sites (active only under an armed
+    :class:`~repro.resilience.faults.FaultPlan`):
+    ``kernels.scatter.raise`` raises mid-epoch before the kernel;
+    ``kernels.scatter.allpoison`` silently drops the whole batch
+    (every index poisoned) — the codegen drivers' shadow replicas catch
+    the missing commits before memory write-back.
     """
+    if faults.ACTIVE:
+        faults.inject("kernels.scatter.raise")
+        if faults.fire("kernels.scatter.allpoison"):
+            idx = jnp.full_like(idx, -1)
     return _spec_scatter_add(table, idx, values, block_d=block_d,
                              block_n=block_n,
                              interpret=resolve_interpret(interpret))

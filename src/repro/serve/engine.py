@@ -1,13 +1,32 @@
 """Batched serving engine: continuous-batching-lite over prefill/decode.
 
-Requests join a fixed-slot batch; finished sequences free their slot for the
-next queued prompt (slot reuse = the speculative-buffer discipline again:
-fixed-capacity superset, poisoned/empty slots masked).  Greedy sampling.
+Requests join a fixed-slot batch; finished sequences free their slot for
+the next queued prompt (slot reuse = the speculative-buffer discipline
+again: fixed-capacity superset, poisoned/empty slots masked).  Greedy
+sampling.
+
+Failure semantics (the degradation ladder, serving edition): a request
+that raises during a wave no longer loses the whole wave.  The wave's
+partial tokens are discarded (never commit a torn wave), the poisoned
+request — identified by the fault's ``rid`` when it carries one — is
+marked ``failed``, and the survivors are re-queued for a bounded number
+of solo retries (``wave_retries``).  ``run()`` therefore always returns:
+completed requests carry their tokens, failed ones carry ``failed=True``
++ ``error`` and whatever partial output survived (none — cleared).
+Every retry/failure is recorded as a
+:class:`~repro.resilience.ladder.FailureEvent` on ``Engine.events``.
+
+Fault sites (armed :class:`~repro.resilience.faults.FaultPlan` only):
+``serve.slot`` (one slot dies at wave start, poisoning its request),
+``serve.decode`` (a decode step times out, killing the wave with no
+culprit), ``serve.storm`` (the queue doubles mid-run with synthetic
+clones — shed after serving, excluded from results).
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +34,9 @@ import numpy as np
 
 from ..configs.base import ArchConfig
 from ..models.model import build_model
+from ..resilience import faults
+from ..resilience.faults import InjectedFault
+from ..resilience.ladder import FailureEvent
 
 
 @dataclass
@@ -24,32 +46,91 @@ class Request:
     max_new: int = 16
     out: List[int] = field(default_factory=list)
     done: bool = False
+    retries: int = 0
+    failed: bool = False
+    error: Optional[str] = None
 
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params=None, *, slots: int = 4,
-                 max_len: int = 128, dispatch: str = "spec"):
+                 max_len: int = 128, dispatch: str = "spec",
+                 wave_retries: int = 1):
         self.cfg = cfg
         self.model = build_model(cfg, dispatch=dispatch)
         self.params = params if params is not None else self.model.init(
             jax.random.PRNGKey(0))
         self.slots = slots
         self.max_len = max_len
+        self.wave_retries = wave_retries
+        self.events: List[FailureEvent] = []
         self._decode = jax.jit(
             lambda p, c, t, n: self.model.decode_step(p, c, t, n))
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Serve all requests to completion; batched prefill per wave."""
-        queue = list(requests)
+        """Serve all requests; batched prefill per wave, partial results
+        on failure (see module docstring)."""
+        queue: deque = deque(requests)
+        if faults.ACTIVE and faults.fire("serve.storm"):
+            # request storm: synthetic clones (negative rids) double the
+            # queue; they are served like real load but shed from results
+            clones = [Request(rid=-(i + 1), prompt=r.prompt,
+                              max_new=r.max_new)
+                      for i, r in enumerate(requests)]
+            queue.extend(clones)
+            self.events.append(FailureEvent(
+                site="serve.storm", rung="wave",
+                cause=f"queue doubled (+{len(clones)} synthetic requests)",
+                retries=0, outcome="shed"))
         results: Dict[int, List[int]] = {}
         while queue:
-            wave, queue = queue[:self.slots], queue[self.slots:]
-            self._run_wave(wave)
+            # retried requests run solo — don't let one poisoned request
+            # take fresh work down with it twice
+            if queue[0].retries:
+                wave = [queue.popleft()]
+            else:
+                wave = []
+                while (queue and len(wave) < self.slots
+                       and not queue[0].retries):
+                    wave.append(queue.popleft())
+            try:
+                self._run_wave(wave)
+            except Exception as e:  # noqa: BLE001 — degrade, don't crash
+                rid = getattr(e, "rid", None)
+                site = getattr(e, "site", "")
+                for r in wave:
+                    r.out.clear()  # never commit a torn wave's tokens
+                    poisoned = rid is not None and r.rid == rid
+                    if poisoned or r.retries >= self.wave_retries:
+                        r.failed = True
+                        r.error = str(e)
+                        r.done = True
+                        self.events.append(FailureEvent(
+                            site=site, rung="solo" if r.retries else "wave",
+                            cause=str(e), retries=r.retries,
+                            outcome="failed"))
+                        if r.rid >= 0:
+                            results[r.rid] = r.out
+                    elif r.rid < 0:
+                        pass  # synthetic storm clone: shed, don't retry
+                    else:
+                        self.events.append(FailureEvent(
+                            site=site, rung="wave", cause=str(e),
+                            retries=r.retries, outcome="retry"))
+                        r.retries += 1
+                        queue.appendleft(r)
+                continue
             for r in wave:
-                results[r.rid] = r.out
+                if r.rid >= 0:
+                    results[r.rid] = r.out
         return results
 
     def _run_wave(self, wave: List[Request]) -> None:
+        if faults.ACTIVE:
+            for r in wave:
+                if faults.fire("serve.slot"):
+                    raise InjectedFault(
+                        "serve.slot", f"slot died serving request {r.rid}",
+                        rid=r.rid)
         b = len(wave)
         plen = max(len(r.prompt) for r in wave)
         toks = np.zeros((b, plen), np.int32)
@@ -61,6 +142,7 @@ class Engine:
         cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         max_new = max(r.max_new for r in wave)
         for step in range(max_new):
+            faults.inject("serve.decode")
             for i, r in enumerate(wave):
                 if step < r.max_new:
                     r.out.append(int(cur[i, 0]))

@@ -18,12 +18,23 @@ Policies:
 * **Elastic scaling** — `plan_remesh` maps a surviving device count to the
   largest fillable (data, model) mesh, keeping the model axis intact first
   (TP/EP shards are stateful; DP shrink only re-slices the batch).
+
+This policy engine is a consumer of the shared resilience plane
+(:mod:`repro.resilience`): an armed
+:class:`~repro.resilience.faults.FaultPlan` can drop heartbeats
+(``train.heartbeat``) and inflate step times (``train.straggler``)
+deterministically, and every RESTART/REDISPATCH decision is recorded as
+a :class:`~repro.resilience.ladder.FailureEvent` on ``monitor.events``
+— the same taxonomy the codegen ladder and the serving engine use.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Tuple
+
+from ..resilience import faults
+from ..resilience.ladder import FailureEvent
 
 
 @dataclass
@@ -47,11 +58,16 @@ class FaultMonitor:
         self.clock = clock
         self.hosts: Dict[str, HostState] = {
             h: HostState(last_beat=clock()) for h in hosts}
+        self.events: List[FailureEvent] = []
 
     def heartbeat(self, host: str) -> None:
+        if faults.ACTIVE and faults.fire("train.heartbeat"):
+            return  # beat lost in flight
         self.hosts[host].last_beat = self.clock()
 
     def report_step(self, host: str, seconds: float) -> None:
+        if faults.ACTIVE and faults.fire("train.straggler"):
+            seconds *= 2.0 * self.cfg.straggler_factor
         st = self.hosts[host]
         st.ewma_step = (0.7 * st.ewma_step + 0.3 * seconds
                         if st.ewma_step else seconds)
@@ -77,9 +93,19 @@ class FaultMonitor:
     def decide(self) -> Tuple[str, List[str]]:
         dead = self.dead_hosts()
         if dead:
+            for h in dead:
+                self.events.append(FailureEvent(
+                    site="train.heartbeat", rung="fleet",
+                    cause=f"host {h} silent past dead_after", retries=0,
+                    outcome="descend"))
             return "RESTART_ELASTIC", dead
         slow = self.stragglers()
         if slow:
+            for h in slow:
+                self.events.append(FailureEvent(
+                    site="train.straggler", rung="fleet",
+                    cause=f"host {h} slower than fleet median", retries=0,
+                    outcome="retry"))
             return "REDISPATCH", slow
         return "OK", []
 

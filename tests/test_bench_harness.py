@@ -100,13 +100,18 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
         return {"spmv": {"interp_us": 10.0, "numpy_us": 10.0,
                          "numpy_x": 1.0, "jax_us": 100.0, "jax_x": 0.1}}
 
-    from benchmarks import dae_codegen
+    def fake_chaos(repeats=None, budget_s=None, **kw):
+        calls["chaos"] = {"repeats": repeats, "budget_s": budget_s}
+        return "quiet_ovh_max=0.10%"
+
+    from benchmarks import dae_chaos, dae_codegen
     monkeypatch.setattr(dae_table1, "main", fake_table1)
     monkeypatch.setattr(dae_table1, "steady_ab", fake_steady)
     monkeypatch.setattr(dae_table2, "main", fake_table2)
     monkeypatch.setattr(dae_fig7, "main", fake_fig7)
     monkeypatch.setattr(dae_quiescent, "main", fake_quiescent)
     monkeypatch.setattr(dae_codegen, "main", fake_codegen)
+    monkeypatch.setattr(dae_chaos, "main", fake_chaos)
 
     out = tmp_path / "bench.json"
     bench_run.main(["--quick", "--json", str(out)])
@@ -119,10 +124,11 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
     assert calls["fig7"]["max_levels"] == 4
     assert calls["quiescent"]["points"] == dae_quiescent.QUICK_POINTS
     assert calls["codegen"]["jax_benches"] == ("spmv",)  # one jax leg
+    assert calls["chaos"]["repeats"] == 8  # quick trades margin for wall
     rows = json.loads(out.read_text())
     names = [r["name"] for r in rows]
     assert names == ["dae_table1", "dae_steady", "dae_table2", "dae_fig7",
-                     "dae_quiescent", "dae_codegen"]
+                     "dae_quiescent", "dae_codegen", "dae_chaos"]
     assert "moe_ab" not in names and "kernel_bench" not in names
 
 
@@ -152,11 +158,14 @@ def test_window_flag_propagates(monkeypatch, tmp_path, capsys):
     monkeypatch.setattr(dae_quiescent, "main",
                         lambda points=None, **kw:
                         {"speedup": 1.0, "hit": 0.0, "rows": []})
-    from benchmarks import dae_codegen
+    from benchmarks import dae_chaos, dae_codegen
     monkeypatch.setattr(dae_codegen, "main",
                         lambda benches=None, jax_benches=None, **kw:
                         {"spmv": {"interp_us": 1.0, "numpy_us": 1.0,
                                   "numpy_x": 1.0}})
+    monkeypatch.setattr(dae_chaos, "main",
+                        lambda repeats=None, budget_s=None, **kw:
+                        "quiet_ovh_max=0.10%")
     bench_run.main(["--quick", "--json", str(tmp_path / "a.json")])
     assert seen["window_env"] == "1"
     assert seen["pipeline_env"] == "1"
@@ -226,6 +235,38 @@ def test_gate_rejects_malformed_rows(tmp_path):
     good = _write(tmp_path / "good.json", [("a", 1.0)])
     with pytest.raises(SystemExit, match="malformed"):
         bench_compare.main([str(bad), "--baseline", good])
+
+
+@pytest.mark.parametrize("poison", ["nan", "inf", "-inf"])
+def test_gate_rejects_non_finite_timings(tmp_path, poison):
+    """float('nan') compares False against every threshold, so a crashed
+    section would silently PASS the gate without the isfinite check."""
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(
+        [{"name": "a", "us_per_call": poison, "derived": ""}]))
+    good = _write(tmp_path / "good.json", [("a", 1.0)])
+    with pytest.raises(SystemExit, match="non-finite"):
+        bench_compare.main([str(bad), "--baseline", good])
+
+
+def test_gate_require_missing_section_fails(tmp_path, capsys):
+    """--require turns a silently dropped section into a loud failure
+    (without it, a section missing from one file is just skipped)."""
+    base = _write(tmp_path / "base.json", [("a", 100.0), ("b", 1.0)])
+    new = _write(tmp_path / "new.json", [("a", 100.0)])
+    # without --require the missing section is skipped and the gate passes
+    assert bench_compare.main([new, "--baseline", base]) == 0
+    capsys.readouterr()
+    with pytest.raises(SystemExit, match=r"required section.*b"):
+        bench_compare.main([new, "--baseline", base, "--require", "a,b"])
+
+
+def test_gate_require_present_sections_pass(tmp_path, capsys):
+    base = _write(tmp_path / "base.json", [("a", 100.0), ("b", 1.0)])
+    new = _write(tmp_path / "new.json", [("a", 100.0), ("b", 1.0)])
+    assert bench_compare.main([new, "--baseline", base,
+                               "--require", "a,b"]) == 0
+    capsys.readouterr()
 
 
 # ---------------------------------------------------------------------------

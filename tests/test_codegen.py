@@ -210,6 +210,39 @@ def test_randprog_sweep_matches_interp(leg):
             cu_modes
 
 
+def test_randprog_sweep_chaos_descends_exact():
+    """Chaos leg of the 32-seed sweep: per seed, one fault site (chosen
+    from the seed) is armed while the program runs on the numpy target.
+    The degradation ladder must land every run bit-identical to the
+    interpreter on a lower rung — or raise with memory untouched."""
+    from repro.resilience import faults
+    from repro.resilience.faults import FaultPlan
+    sites = ("codegen.streams", "codegen.vector.epoch", "codegen.coupled")
+    descents = 0
+    for seed in _randprog_cases():
+        site = sites[seed % len(sites)]
+        g = randprog.generate(seed % (2 ** 31))
+        kw = {"cu_mode": "vector"} if site == "codegen.vector.epoch" else {}
+        for pname, cf in COMPILERS.items():
+            comp = cf(g.fn, g.decoupled)
+            ref = {k: v.copy() for k, v in g.memory.items()}
+            interp.run(g.fn, ref)
+            mem = {k: v.copy() for k, v in g.memory.items()}
+            try:
+                with faults.armed(FaultPlan({site: 0.5}, seed=seed)):
+                    r = codegen.run(comp, mem, target="numpy", **kw)
+            except codegen.CodegenError:
+                # contained: even a fault on the last rung must leave
+                # memory untouched
+                _assert_exact(g.memory, mem, f"chaos{seed}/{pname}/raise")
+                continue
+            finally:
+                assert not faults.ACTIVE  # armed() restored the plane
+            _assert_exact(ref, mem, f"chaos{seed}/{pname}/{site}")
+            descents += sum(e.outcome == "descend" for e in r.events)
+    assert descents > 0  # the sweep must actually exercise the ladder
+
+
 # ---------------------------------------------------------------------------
 # explicit fallback / strict behaviour
 # ---------------------------------------------------------------------------

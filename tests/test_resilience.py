@@ -1,0 +1,457 @@
+"""Chaos gate for the resilience plane (repro.resilience).
+
+Four layers:
+
+* **plan determinism** — a :class:`FaultPlan` fires identically from the
+  same seed, per site, regardless of what other sites did; env arming
+  (``DAE_FAULT_PLAN``) parses and rejects loudly;
+* **ladder policy** — transient failures retry with bounded backoff,
+  deterministic refusals descend immediately, the last rung re-raises,
+  every step lands in ``events``;
+* **chaos soak** — injected faults at every codegen/kernel site, across
+  table1 kernels and randprog programs, must end either bit-identical to
+  the sequential-interpreter reference (ladder descent/retry) or raise
+  ``CodegenError`` with memory untouched — no silently wrong commit;
+* **consumers** — the serving engine degrades per-request instead of
+  crashing ``run()``; the fleet policy engine emits the shared
+  ``FailureEvent`` taxonomy.
+"""
+import numpy as np
+import pytest
+
+from conftest import dae_test_seed
+from repro import codegen
+from repro.bench_irregular import ALL
+from repro.core import interp, pipeline, randprog
+from repro.resilience import faults
+from repro.resilience.faults import (FaultDetected, FaultError, FaultPlan,
+                                     InjectedFault)
+from repro.resilience.ladder import FailureEvent, Ladder
+
+SMALL = {
+    "bfs": dict(n_nodes=24, n_edges=64),
+    "bc": dict(n_nodes=20, n_edges=48),
+    "sssp": dict(n_nodes=20, n_edges=56),
+    "hist": dict(n=96),
+    "thr": {},
+    "mm": {},
+    "fw": dict(n=6),
+    "sort": dict(n=16),
+    "spmv": dict(n=12),
+}
+
+#: which codegen sites are reachable per leg; (target, cu_mode) per leg
+NUMPY_SITES = ("codegen.streams", "codegen.vector.epoch", "codegen.coupled")
+JAX_SITES = ("codegen.streams", "codegen.vector.epoch", "codegen.jax.refill",
+             "codegen.jax.flush", "codegen.coupled", "kernels.gather.rows",
+             "kernels.gather.allpoison", "kernels.scatter.allpoison",
+             "kernels.scatter.raise")
+
+
+@pytest.fixture(autouse=True)
+def _disarmed():
+    """Every test starts and ends unarmed, whatever happened inside."""
+    faults.disarm()
+    yield
+    faults.disarm()
+
+
+def _interp_ref(case):
+    ref = {k: v.copy() for k, v in case.memory.items()}
+    interp.run(case.fn, ref, case.params)
+    return ref
+
+
+def _assert_contained(comp, memory0, params, ref, tag, *, target, **kw):
+    """The chaos invariant: the run either matches the reference exactly
+    or raises with memory untouched.  Returns the CodegenRun (or None
+    when the run raised)."""
+    mem = {k: v.copy() for k, v in memory0.items()}
+    try:
+        r = codegen.run(comp, mem, params, target=target, **kw)
+    except codegen.CodegenError:
+        for k in memory0:
+            assert np.array_equal(mem[k], memory0[k]), \
+                f"{tag}: raised but memory[{k}] was touched"
+        return None
+    for k in ref:
+        assert np.array_equal(mem[k], ref[k]), f"{tag}: array {k} differs"
+    return r
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan determinism + arming
+# ---------------------------------------------------------------------------
+
+
+def test_plan_is_deterministic_per_site():
+    seq = []
+    for _ in range(2):
+        p = FaultPlan({"serve.slot": 0.5, "serve.decode": 0.5}, seed=7)
+        seq.append([p.should_fire("serve.slot") for _ in range(32)])
+    assert seq[0] == seq[1]
+    # interleaving queries of another site must not perturb the stream
+    p = FaultPlan({"serve.slot": 0.5, "serve.decode": 0.5}, seed=7)
+    inter = []
+    for _ in range(32):
+        p.should_fire("serve.decode")
+        inter.append(p.should_fire("serve.slot"))
+    assert inter == seq[0]
+
+
+def test_plan_caps_and_after():
+    p = FaultPlan({"serve.slot": 1.0}, seed=1, max_fires=2, after=3)
+    fires = [p.should_fire("serve.slot") for _ in range(10)]
+    assert fires == [False] * 3 + [True, True] + [False] * 5
+    assert [f.call for f in p.fired] == [3, 4]
+
+
+def test_plan_rejects_unknown_pattern_and_bad_rate():
+    with pytest.raises(ValueError, match="matches no known site"):
+        FaultPlan({"codgen.typo": 1.0})
+    with pytest.raises(ValueError, match="out of"):
+        FaultPlan({"serve.slot": 1.5})
+
+
+def test_plan_glob_expands_against_sites():
+    p = FaultPlan({"serve.*": 1.0}, seed=0)
+    assert set(p._rates) == {s for s in faults.SITES
+                             if s.startswith("serve.")}
+
+
+def test_env_plan_parses_and_arms():
+    p = faults.plan_from_env("serve.slot=0.25, kernels.gather.*")
+    assert p._rates["serve.slot"] == 0.25
+    assert p._rates["kernels.gather.rows"] == 1.0
+    assert faults.plan_from_env("") is None
+    with pytest.raises(ValueError, match="bad rate"):
+        faults.plan_from_env("serve.slot=lots")
+
+
+def test_armed_context_restores_previous_plan():
+    outer = FaultPlan({"serve.slot": 1.0}, seed=0)
+    inner = FaultPlan({"serve.decode": 1.0}, seed=0)
+    assert not faults.ACTIVE
+    with faults.armed(outer):
+        with faults.armed(inner):
+            assert faults.current() is inner
+        assert faults.current() is outer
+    assert not faults.ACTIVE and faults.current() is None
+
+
+def test_fire_and_inject_are_noops_when_unarmed():
+    assert faults.fire("serve.slot") is False
+    faults.inject("codegen.coupled")  # must not raise
+    with pytest.raises(ValueError, match="unknown fault site"):
+        with faults.armed(FaultPlan({"serve.slot": 1.0}, seed=0)):
+            faults.fire("no.such.site")
+
+
+# ---------------------------------------------------------------------------
+# Ladder policy
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_retries_transient_then_descends():
+    calls = []
+
+    def attempt(rung):
+        calls.append(rung)
+        if rung == "vector":
+            raise InjectedFault("codegen.vector.epoch")
+        return "ok"
+
+    lad = Ladder(["vector", "state-machine"], max_retries=2)
+    rung, res = lad.run(attempt)
+    assert (rung, res) == ("state-machine", "ok")
+    assert calls == ["vector"] * 3 + ["state-machine"]
+    assert [e.outcome for e in lad.events] == ["retry", "retry", "descend"]
+    assert all(e.site == "codegen.vector.epoch" for e in lad.events)
+
+
+def test_ladder_deterministic_failure_descends_immediately():
+    calls = []
+
+    def attempt(rung):
+        calls.append(rung)
+        if rung == "vector":
+            raise codegen.CodegenError("not uniform")
+        return 1
+
+    lad = Ladder(["vector", "coupled"], max_retries=5,
+                 catch=(codegen.CodegenError,))
+    lad.run(attempt)
+    assert calls == ["vector", "coupled"]  # no retry of a refusal
+
+
+def test_ladder_last_rung_reraises_with_backoff_schedule():
+    sleeps = []
+
+    def attempt(rung):
+        raise InjectedFault("serve.slot")
+
+    lad = Ladder(["only"], max_retries=3, backoff=0.1, sleep=sleeps.append)
+    with pytest.raises(InjectedFault):
+        lad.run(attempt)
+    assert sleeps == [0.1, 0.2, 0.4]  # exponential per retry
+    assert [e.outcome for e in lad.events] == ["retry"] * 3 + ["raise"]
+
+
+def test_ladder_rejects_empty_rungs():
+    with pytest.raises(ValueError):
+        Ladder([])
+
+
+# ---------------------------------------------------------------------------
+# chaos soak: every site × kernels × both pipelines
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_soak_numpy_sites():
+    """Exception faults on the numpy target: every site, both CU modes,
+    three kernels — always contained."""
+    base = dae_test_seed()
+    descents = 0
+    for name in ("spmv", "hist", "sort"):
+        case = ALL[name](**SMALL[name])
+        ref = _interp_ref(case)
+        for pname, cf in (("dae", pipeline.compile_dae),
+                          ("spec", pipeline.compile_spec)):
+            comp = cf(case.fn, case.decoupled)
+            for site in NUMPY_SITES:
+                for rate in (1.0, 0.5):
+                    with faults.armed(FaultPlan({site: rate}, seed=base)):
+                        r = _assert_contained(
+                            comp, case.memory, case.params, ref,
+                            f"{name}/{pname}/{site}/{rate}",
+                            target="numpy", cu_mode="vector"
+                            if site == "codegen.vector.epoch" else "auto")
+                    if r is not None and r.events:
+                        descents += 1
+                        assert all(isinstance(e, FailureEvent)
+                                   for e in r.events)
+    assert descents > 0
+
+
+def test_chaos_soak_jax_sites():
+    """All jax-reachable sites (incl. kernel corruption) on two SMALL
+    kernels, auto cu_mode — contained, and corruption is *detected*."""
+    base = dae_test_seed()
+    outcomes = {"clean": 0, "descended": 0, "raised": 0}
+    for name in ("spmv", "hist"):
+        case = ALL[name](**SMALL[name])
+        ref = _interp_ref(case)
+        comp = pipeline.compile_spec(case.fn, case.decoupled)
+        for site in JAX_SITES:
+            with faults.armed(FaultPlan({site: 0.5}, seed=base)):
+                r = _assert_contained(comp, case.memory, case.params, ref,
+                                      f"{name}/{site}", target="jax",
+                                      interpret=True)
+            if r is None:
+                outcomes["raised"] += 1
+            elif r.events:
+                outcomes["descended"] += 1
+            else:
+                outcomes["clean"] += 1
+    assert outcomes["descended"] > 0, outcomes
+
+
+def test_chaos_corruption_is_detected_not_committed():
+    """A gather that returns corrupted rows must surface as a
+    FaultDetected-driven descent (or contained raise) — the wrong values
+    must never reach memory.  rate=1.0 corrupts every gather, so every
+    generated-path rung fails and only coupled (kernel-free) succeeds."""
+    case = ALL["spmv"](**SMALL["spmv"])
+    ref = _interp_ref(case)
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    for site in ("kernels.gather.rows", "kernels.scatter.allpoison"):
+        with faults.armed(FaultPlan({site: 1.0}, seed=3)) as plan:
+            r = _assert_contained(comp, case.memory, case.params, ref, site,
+                                  target="jax", interpret=True)
+        assert plan.fired, f"{site}: plan never fired"
+        assert r is not None and r.fell_back
+        assert any(e.outcome == "descend" for e in r.events)
+
+
+def test_chaos_randprog_every_site():
+    """One randprog program per codegen site (seed-derived), both
+    pipelines, jax target — the full ladder under randomized IR."""
+    base = dae_test_seed()
+    for i, site in enumerate(JAX_SITES):
+        g = randprog.generate((base + i) % (2 ** 31))
+        ref = {k: v.copy() for k, v in g.memory.items()}
+        interp.run(g.fn, ref)
+        for pname, cf in (("dae", pipeline.compile_dae),
+                          ("spec", pipeline.compile_spec)):
+            comp = cf(g.fn, g.decoupled)
+            with faults.armed(FaultPlan({site: 0.5}, seed=base + i)):
+                _assert_contained(comp, g.memory, None, ref,
+                                  f"randprog{i}/{pname}/{site}",
+                                  target="jax", interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: strict=True memory-untouched under *mid-run* vector failure
+# ---------------------------------------------------------------------------
+
+
+def _two_epoch_case():
+    """A program whose vector run needs >= 2 epoch commits (trip count
+    beyond one epoch window), so `after=1` kills the driver only after
+    an epoch has already committed to its working copy."""
+    case = ALL["hist"](n=600)  # 600 iterations > one bounded epoch
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    return case, comp
+
+
+def test_strict_vector_midrun_failure_leaves_memory_untouched():
+    case, comp = _two_epoch_case()
+    plan = FaultPlan({"codegen.vector.epoch": 1.0}, seed=0, after=1,
+                     max_fires=1)
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    with faults.armed(plan):
+        with pytest.raises(codegen.CodegenError, match="unavailable"):
+            codegen.run(comp, mem, case.params, target="numpy",
+                        cu_mode="vector", strict=True, max_retries=0)
+    assert plan.fired and plan.fired[0].call == 1  # died on commit #2
+    for k in case.memory:
+        assert np.array_equal(mem[k], case.memory[k]), \
+            f"partial epoch leaked into memory[{k}]"
+
+
+def test_nonstrict_vector_midrun_failure_descends_exact():
+    case, comp = _two_epoch_case()
+    ref = _interp_ref(case)
+    plan = FaultPlan({"codegen.vector.epoch": 1.0}, seed=0, after=1,
+                     max_fires=1)
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    with faults.armed(plan):
+        r = codegen.run(comp, mem, case.params, target="numpy",
+                        cu_mode="vector", max_retries=0)
+    for k in ref:
+        assert np.array_equal(mem[k], ref[k])
+    assert r.fell_back  # pinned vector: descends to coupled
+    assert any(e.site == "codegen.vector.epoch" and e.outcome == "descend"
+               for e in r.events)
+
+
+def test_jax_vector_midrun_failure_retry_recovers():
+    """max_fires=1 + a retry budget: the same rung succeeds on retry
+    (transient faults are retried before descending)."""
+    case = ALL["spmv"](**SMALL["spmv"])
+    ref = _interp_ref(case)
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    plan = FaultPlan({"codegen.vector.epoch": 1.0}, seed=0, max_fires=1)
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    with faults.armed(plan):
+        r = codegen.run(comp, mem, case.params, target="jax",
+                        interpret=True, cu_mode="vector", max_retries=1)
+    for k in ref:
+        assert np.array_equal(mem[k], ref[k])
+    assert r.cu_mode == "vector" and not r.fell_back
+    assert [e.outcome for e in r.events] == ["retry"]
+
+
+# ---------------------------------------------------------------------------
+# armed-but-quiet: a plan whose sites never fire must change nothing
+# ---------------------------------------------------------------------------
+
+
+def test_armed_but_quiet_is_bit_identical_with_no_events():
+    case = ALL["spmv"](**SMALL["spmv"])
+    ref = _interp_ref(case)
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    for target, kw in (("numpy", {}), ("jax", {"interpret": True})):
+        mem = {k: v.copy() for k, v in case.memory.items()}
+        with faults.armed(FaultPlan({"serve.slot": 1.0}, seed=0)):
+            r = codegen.run(comp, mem, case.params, target=target, **kw)
+        for k in ref:
+            assert np.array_equal(mem[k], ref[k])
+        assert r.events == [] and not r.fell_back
+
+
+# ---------------------------------------------------------------------------
+# serving engine: per-slot containment (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+def _engine_and_requests(n=6, slots=3):
+    from repro.configs.base import get, smoke
+    from repro.serve.engine import Engine, Request
+    cfg = smoke(get("granite_34b"))
+    eng = Engine(cfg, slots=slots, max_len=48)
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 6), max_new=4)
+            for i in range(n)]
+    return cfg, eng, reqs
+
+
+def test_engine_slot_fault_fails_one_request_not_the_wave():
+    cfg, eng, reqs = _engine_and_requests()
+    with faults.armed(FaultPlan({"serve.slot": 1.0}, seed=0, max_fires=1)):
+        results = eng.run(reqs)
+    assert set(results) == set(range(6))
+    failed = [r for r in reqs if r.failed]
+    assert len(failed) == 1 and failed[0].out == []
+    assert "slot died" in failed[0].error
+    for r in reqs:
+        if not r.failed:
+            assert len(r.out) == 4
+            assert all(0 <= t < cfg.vocab for t in r.out)
+    assert any(e.site == "serve.slot" and e.outcome == "failed"
+               for e in eng.events)
+    assert any(e.outcome == "retry" for e in eng.events)  # survivors
+
+
+def test_engine_decode_fault_retries_solo_and_recovers():
+    _, eng, reqs = _engine_and_requests()
+    with faults.armed(FaultPlan({"serve.decode": 1.0}, seed=0,
+                                max_fires=1)):
+        results = eng.run(reqs)
+    assert set(results) == set(range(6))
+    assert not any(r.failed for r in reqs)
+    assert all(len(v) == 4 for v in results.values())
+    assert any(e.site == "serve.decode" and e.outcome == "retry"
+               for e in eng.events)
+
+
+def test_engine_persistent_fault_returns_partial_results():
+    """Even a 100%-rate decode fault must not crash run(): every request
+    comes back marked failed with its partial output discarded."""
+    _, eng, reqs = _engine_and_requests(n=4, slots=2)
+    with faults.armed(FaultPlan({"serve.decode": 1.0}, seed=0)):
+        results = eng.run(reqs)
+    assert set(results) == set(range(4))
+    assert all(r.failed and r.out == [] for r in reqs)
+    assert all(e.outcome in ("retry", "failed") for e in eng.events)
+
+
+def test_engine_request_storm_sheds_clones_from_results():
+    _, eng, reqs = _engine_and_requests(n=4, slots=2)
+    with faults.armed(FaultPlan({"serve.storm": 1.0}, seed=0,
+                                max_fires=1)):
+        results = eng.run(reqs)
+    assert set(results) == set(range(4))  # no negative rids leak out
+    assert any(e.site == "serve.storm" and e.outcome == "shed"
+               for e in eng.events)
+
+
+# ---------------------------------------------------------------------------
+# fleet policy engine as a resilience consumer
+# ---------------------------------------------------------------------------
+
+
+def test_fault_monitor_consumes_plan_and_records_events():
+    from repro.train.fault import FaultConfig, FaultMonitor
+    t = [0.0]
+    mon = FaultMonitor(["h0", "h1"], FaultConfig(dead_after=5.0),
+                       clock=lambda: t[0])
+    with faults.armed(FaultPlan({"train.heartbeat": 1.0}, seed=0)):
+        for _ in range(4):
+            t[0] += 2.0
+            mon.heartbeat("h0")  # every beat dropped by the plan
+            mon.hosts["h1"].last_beat = t[0]  # h1 beats out-of-band
+        action, hosts = mon.decide()
+    assert action == "RESTART_ELASTIC" and hosts == ["h0"]
+    assert [e.site for e in mon.events] == ["train.heartbeat"]
+    assert mon.events[0].rung == "fleet"
