@@ -4,13 +4,22 @@ committed baseline.
 Usage::
 
     python -m benchmarks.compare NEW.json [--baseline BENCH_machine.json]
-                                 [--tolerance 0.25] [--require A,B]
+                                 [--tolerance 0.25] [--require A,B,C.key]
 
 Rows are matched by ``name`` and compared on ``us_per_call``; a section
 slower than ``baseline * (1 + tolerance)`` is a regression and the exit
 status is non-zero.  Sections present in only one file are reported but do
 not fail the gate (the quick and full matrices intentionally differ);
 an empty intersection fails, because then the gate checked nothing.
+
+A ``--require`` entry of the form ``section.key`` reaches into that
+section's ``derived`` string (comma-separated ``key=value`` pairs): the
+key must be present in the NEW file, and when both files carry it with a
+numeric value (a trailing ``x`` is stripped), a new value above
+``baseline * (1 + tolerance)`` fails the gate — this is how absolute
+counters like ``dae_codegen.hist_calls`` gate a forwarding regression
+that wall time would hide.  A derived key missing from the *baseline*
+only warns (older baselines predate the key).
 The default tolerance (25%) suits a quiet dedicated box; CI on shared
 runners passes a looser value explicitly.  Faster-than-baseline rows are
 listed as improvements so a stale baseline is visible too.
@@ -45,6 +54,69 @@ def load_rows(path: str) -> Dict[str, float]:
                 f"mid-run; regenerate the JSON")
         out[row["name"]] = val
     return out
+
+
+def load_derived(path: str) -> Dict[str, Dict[str, str]]:
+    """Per-section ``derived`` strings parsed as ``key=value`` maps.
+
+    Fragments without ``=`` (free-text derived strings) are skipped;
+    duplicate keys keep the last occurrence, matching how run.py builds
+    the strings.
+    """
+    with open(path) as fh:
+        data = json.load(fh)
+    out: Dict[str, Dict[str, str]] = {}
+    for row in data:
+        if not isinstance(row, dict) or "name" not in row:
+            continue
+        kv: Dict[str, str] = {}
+        for frag in str(row.get("derived", "")).split(","):
+            if "=" in frag:
+                k, v = frag.split("=", 1)
+                kv[k.strip()] = v.strip()
+        out[str(row["name"])] = kv
+    return out
+
+
+def _numeric(s: str):
+    """float value of a derived fragment (``19x`` -> 19.0), else None."""
+    try:
+        return float(s.rstrip("x"))
+    except (ValueError, AttributeError):
+        return None
+
+
+def check_required_keys(reqs: List[str], new_path: str, base_path: str,
+                        tolerance: float) -> List[str]:
+    """Gate ``section.key`` requirements; returns report lines.
+
+    Raises SystemExit when a required key is missing from the new file
+    or its numeric value regressed beyond tolerance.
+    """
+    new_d = load_derived(new_path)
+    base_d = load_derived(base_path)
+    lines: List[str] = []
+    for req in reqs:
+        section, key = req.split(".", 1)
+        nv = new_d.get(section, {}).get(key)
+        if nv is None:
+            raise SystemExit(
+                f"{new_path}: required derived key {req!r} missing — the "
+                f"benchmark that produces it did not run (or was renamed)")
+        bv = base_d.get(section, {}).get(key)
+        if bv is None:
+            lines.append(f"  {req}: {nv} (no baseline value — skipped)")
+            continue
+        nn, bn = _numeric(nv), _numeric(bv)
+        if nn is None or bn is None:
+            lines.append(f"  {req}: {bv} -> {nv} (non-numeric — skipped)")
+            continue
+        if nn > bn * (1.0 + tolerance):
+            raise SystemExit(
+                f"required derived key {req!r} regressed: "
+                f"{bv} -> {nv} (tolerance {tolerance:.0%})")
+        lines.append(f"  {req}: {bv} -> {nv} ok")
+    return lines
 
 
 def compare(new: Dict[str, float], base: Dict[str, float],
@@ -84,18 +156,25 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed slowdown fraction before failing "
                          "(default: 0.25 = 25%%)")
-    ap.add_argument("--require", default=None, metavar="A,B",
+    ap.add_argument("--require", default=None, metavar="A,B,C.key",
                     help="comma-separated section names that must be "
                          "present in BOTH files — a silently dropped "
-                         "section fails the gate instead of being skipped")
+                         "section fails the gate instead of being "
+                         "skipped.  A 'section.key' entry gates that "
+                         "key of the section's derived string instead "
+                         "(must exist in the new file; numeric values "
+                         "may not regress beyond tolerance)")
     args = ap.parse_args(argv)
     if args.tolerance < 0:
         raise SystemExit("--tolerance must be >= 0")
 
     new = load_rows(args.new)
     base = load_rows(args.baseline)
+    key_lines: List[str] = []
     if args.require:
-        names = [s.strip() for s in args.require.split(",") if s.strip()]
+        entries = [s.strip() for s in args.require.split(",") if s.strip()]
+        names = [s for s in entries if "." not in s]
+        key_reqs = [s for s in entries if "." in s]
         for path, rows in ((args.new, new), (args.baseline, base)):
             missing = sorted(set(names) - set(rows))
             if missing:
@@ -103,11 +182,18 @@ def main(argv=None) -> int:
                     f"{path}: required section(s) missing: "
                     f"{', '.join(missing)} — the benchmark that produces "
                     f"them did not run (or was renamed)")
+        if key_reqs:
+            key_lines = check_required_keys(key_reqs, args.new,
+                                            args.baseline, args.tolerance)
     lines, regressions = compare(new, base, args.tolerance)
     print(f"bench gate: {args.new} vs {args.baseline} "
           f"(tolerance {args.tolerance:.0%})")
     for ln in lines:
         print(ln)
+    if key_lines:
+        print("required derived keys:")
+        for ln in key_lines:
+            print(ln)
     if regressions:
         print(f"FAIL: {len(regressions)} section(s) regressed "
               f">{args.tolerance:.0%}: {', '.join(regressions)}")

@@ -21,6 +21,16 @@ optimistic epoch planner almost never cuts), which is where the
 paper-shaped win shows — ``jaxv_x`` records state-machine wall over
 vectorised wall per kernel.
 
+The **forwarding A/B** (``FWD_BENCHES``) runs the reduction-shaped
+kernels (hist/spmv/sort) through the jax cu-vector path with
+segmented-scan RAW forwarding on and off, recording epoch and
+kernel-call counts: with forwarding, those counts must not scale with
+same-address run length (sort keeps its cut — its compare-exchange
+stores are not an associative chain — and serves as the refusal
+control).  The counts land in the run.py derived string
+(``hist_epochs=…,hist_calls=…``) so ``compare.py --require`` can gate a
+forwarding regression, not just a wall-time one.
+
 Bit-exactness against the interpreter is asserted before anything is
 timed — a wrong kernel must fail the bench, not post a fast number.
 """
@@ -44,6 +54,15 @@ VEC_BENCHES: Dict[str, dict] = {
     "bc": {},
 }
 
+#: segmented-scan forwarding A/B: the reduction-shaped kernels whose
+#: committed-RAW pressure used to cut every epoch (forward=False below
+#: reproduces the pre-forwarding driver for the on/off comparison)
+FWD_BENCHES: Dict[str, dict] = {
+    "hist": dict(n=128),
+    "spmv": dict(n=16),
+    "sort": {},
+}
+
 
 def _best_of(fn, repeats: int = 3) -> float:
     best = float("inf")
@@ -57,6 +76,7 @@ def _best_of(fn, repeats: int = 3) -> float:
 def main(benches: Optional[Dict[str, dict]] = None,
          jax_benches: Optional[Iterable[str]] = None,
          vec_benches: Optional[Dict[str, dict]] = None,
+         fwd_benches: Optional[Dict[str, dict]] = None,
          repeats: int = 3) -> Dict[str, Dict[str, float]]:
     from repro import codegen
     from repro.bench_irregular import ALL
@@ -65,6 +85,7 @@ def main(benches: Optional[Dict[str, dict]] = None,
     benches = BENCHES if benches is None else benches
     jax_benches = tuple(benches) if jax_benches is None else tuple(jax_benches)
     vec_benches = VEC_BENCHES if vec_benches is None else vec_benches
+    fwd_benches = FWD_BENCHES if fwd_benches is None else fwd_benches
 
     out: Dict[str, Dict[str, float]] = {}
     hdr = (f"{'bench':6s} {'interp us':>10s} {'numpy us':>10s} "
@@ -155,6 +176,42 @@ def main(benches: Optional[Dict[str, dict]] = None,
         print(f"{name:6s} {row['jaxsm_us']:10.0f} {row['jaxvec_us']:10.0f} "
               f"{row['jaxv_x']:6.1f}x {calls['state-machine']:4d}->"
               f"{calls['vector']:<4d}")
+
+    if fwd_benches:
+        hdr = (f"{'bench':6s} {'epochs':>7s} {'calls':>6s} "
+               f"{'nofwd ep':>9s} {'nofwd calls':>12s} {'fwd?':>5s}")
+        print()
+        print("segmented-scan RAW forwarding A/B (jax cu-vector, "
+              "forward on/off)")
+        print(hdr)
+        print("-" * len(hdr))
+    for name, kw in fwd_benches.items():
+        case = ALL[name](**kw)
+        comp = pipeline.compile_spec(case.fn, case.decoupled)
+        ref = {k: v.copy() for k, v in case.memory.items()}
+        interp.run(case.fn, ref, case.params)
+
+        stats = {}
+        for fwd in (True, False):  # correctness gate + counter capture
+            mem = {k: v.copy() for k, v in case.memory.items()}
+            r = codegen.run(comp, mem, case.params, target="jax",
+                            cu_mode="vector", forward=fwd)
+            assert r.target_used == "jax", r.fallback_reason
+            assert r.cu_mode == "vector", r.vector_reason
+            assert all(np.array_equal(ref[k], mem[k]) for k in ref), name
+            stats[fwd] = r.stats
+
+        row = out.setdefault(name, {})
+        row["epochs"] = stats[True]["epochs"]
+        row["calls"] = (stats[True]["gather_calls"]
+                        + stats[True]["scatter_calls"])
+        row["nofwd_epochs"] = stats[False]["epochs"]
+        row["nofwd_calls"] = (stats[False]["gather_calls"]
+                              + stats[False]["scatter_calls"])
+        row["fwd_epochs"] = stats[True]["fwd_epochs"]
+        print(f"{name:6s} {row['epochs']:7d} {row['calls']:6d} "
+              f"{row['nofwd_epochs']:9d} {row['nofwd_calls']:12d} "
+              f"{'yes' if row['fwd_epochs'] else 'no':>5s}")
     return out
 
 

@@ -167,6 +167,13 @@ def _run_sections(args) -> None:
               if "jax_x" in r]
     parts += [f"{k}_jaxv={r['jaxv_x']:.1f}x" for k, r in cg.items()
               if "jaxv_x" in r]
+    # absolute epoch/kernel-call counts from the forwarding A/B: the
+    # bench gate checks these don't grow (a forwarding regression shows
+    # up as a count jump long before it shows up in wall time)
+    for k, r in cg.items():
+        if "epochs" in r:
+            parts.append(f"{k}_epochs={r['epochs']}")
+            parts.append(f"{k}_calls={r['calls']}")
     rows.append(("dae_codegen", uscg, ",".join(parts)))
 
     print()

@@ -16,6 +16,12 @@ Shows the backend's three execution shapes on one workload (spmv):
    illegal and the backend reports an explicit fallback to the coupled
    untimed interpreter.
 
+It then A/Bs **segmented-scan RAW forwarding** on a worst-case
+same-address histogram (every update hits one bin): with forwarding off
+each committed RAW cuts the epoch, so the epoch count scales with the
+run length; with forwarding on the whole run collapses to one forwarded
+epoch (see docs/epochs.md).
+
 Every path is bit-identical to the sequential reference interpreter.
 """
 import numpy as np
@@ -63,6 +69,22 @@ def main():
               f"{r.stats.get('gather_calls', 0):7d} {str(ok):>6s}")
         if r.fell_back:
             print(f"         `- fallback: {r.fallback_reason}")
+
+    print("\nsegmented-scan RAW forwarding A/B (hist, every update -> "
+          "one bin):")
+    hcase = ALL["hist"](n=128, n_bins=8)
+    hcase.memory["bins"][:] = 0          # worst case: one same-address run
+    href = {k: v.copy() for k, v in hcase.memory.items()}
+    interp.run(hcase.fn, href, hcase.params)
+    hspec = pipeline.compile_spec(hcase.fn, hcase.decoupled)
+    for fwd in (False, True):
+        mem = {k: v.copy() for k, v in hcase.memory.items()}
+        r = hspec.run_generated(mem, hcase.params, target="numpy",
+                                cu_mode="vector", forward=fwd)
+        ok = _exact(href, mem)
+        all_ok = all_ok and ok
+        print(f"  forward={str(fwd):5s} epochs={r.stats['epochs']:3d} "
+              f"forwarded={r.stats['fwd_epochs']} exact={ok}")
 
     src = spec.codegen("numpy")
     n_lines = len(src["cu"].splitlines())

@@ -24,8 +24,18 @@ if-conversion — the post-speculation SPEC shape), the *vectorised* path
 epochs of iterations as batched array ops with poison as a mask lane:
 one gather and at most one WAW-resolved scatter per array per epoch,
 planned optimistically by the shared epoch scheduler
-(:mod:`repro.codegen.epochs`) and cut exactly at the first committed RAW
-hazard.  ``auto`` vectorises the jax target (whose wall time is
+(:mod:`repro.codegen.epochs`).  A committed RAW hazard inside a window
+no longer always cuts it: when the hazard rides an associative
+store-update chain (the hist/spmv reduction shape,
+:attr:`UniformLoop.fwd_chains`) the driver *forwards* the combined
+same-address deltas to the intra-epoch loads through a segmented scan
+and commits the whole window; only genuinely non-associative overwrites
+— or a forwarding refusal, recorded on
+:attr:`CodegenRun.forward_reason` — cut at the first committed hazard
+as before.  On the jax target the decoupled arrays share **one fused**
+device table behind base offsets, so an epoch costs one ``spec_gather``
+plus at most one ``spec_scatter_add`` total.  ``auto`` vectorises the
+jax target (whose wall time is
 per-kernel-call dominated — epochs amortise it) and keeps the state
 machine on the numpy target (compiled per-element Python is already
 cheaper than epoch-batched numpy dispatch at bench sizes).  Non-uniform
@@ -105,6 +115,12 @@ class CodegenRun:
     #: why the vectorised CU did not run (None when it did, or when the
     #: whole target fell back before the CU mode was chosen)
     vector_reason: Optional[str] = None
+    #: why segmented-scan RAW forwarding was refused (last refusal of the
+    #: vector run; None when every hazarded epoch forwarded, when no
+    #: epoch hazarded, or when the CU did not run vectorised).  A refusal
+    #: is *not* a failure — the epoch degrades to the sound optimistic
+    #: cut and, if even that stalls, the run descends the ladder.
+    forward_reason: Optional[str] = None
     #: every retry/descend the degradation ladder observed on this run
     #: (:class:`~repro.resilience.ladder.FailureEvent`); empty on a
     #: clean first-rung success
@@ -112,6 +128,7 @@ class CodegenRun:
 
     @property
     def fell_back(self) -> bool:
+        """True when the run landed on the coupled interpreter rung."""
         return self.target_used == "coupled"
 
 
@@ -140,7 +157,7 @@ def run(compiled, memory: Dict[str, np.ndarray],
         strict: bool = False, interpret: Optional[bool] = None,
         block_n: int = 8, cu_mode: str = "auto",
         max_steps: int = 2_000_000, max_retries: int = 1,
-        backoff: float = 0.0) -> CodegenRun:
+        backoff: float = 0.0, forward: bool = True) -> CodegenRun:
     """Execute ``compiled`` against ``memory`` (mutated in place).
 
     Memory contract matches :func:`repro.core.machine.run_dae`: decoupled
@@ -160,6 +177,12 @@ def run(compiled, memory: Dict[str, np.ndarray],
     ``"state-machine"`` pin one path on either target (a pinned vector
     request that cannot run falls back to the coupled interpreter like
     any other refusal).
+
+    ``forward`` (default True) enables segmented-scan RAW forwarding in
+    the vectorised CU; ``forward=False`` restores the cut-on-every-
+    committed-hazard epoch behaviour (for A/B comparisons — see
+    ``docs/epochs.md``).  The last forwarding refusal, if any, lands on
+    :attr:`CodegenRun.forward_reason`.
 
     A target that cannot run (see module docstring) descends the
     degradation ladder (:mod:`repro.resilience.ladder`) to the coupled
@@ -202,6 +225,7 @@ def run(compiled, memory: Dict[str, np.ndarray],
     streams_box: Dict[str, Streams] = {}
 
     def build_streams() -> Streams:
+        """Run the AGU slice ahead of time (memoised across rungs)."""
         faults.inject("codegen.streams")
         if "s" not in streams_box:
             agu_make = compile_mode(compiled.agu, "agu-stream")
@@ -211,6 +235,7 @@ def run(compiled, memory: Dict[str, np.ndarray],
         return streams_box["s"]
 
     def attempt(rung: str) -> Dict[str, Any]:
+        """Execute one ladder rung end to end; raises descend the ladder."""
         if rung == "coupled":
             from .fallback import run_coupled
             decoupled = getattr(compiled, "decoupled", None) or info.decoupled
@@ -221,7 +246,7 @@ def run(compiled, memory: Dict[str, np.ndarray],
             from .vector import run_vector
             return run_vector(compiled, memory, params, streams, info,
                               target, interpret=interpret, block_n=block_n,
-                              max_steps=max_steps)
+                              max_steps=max_steps, forward=forward)
         if target == "numpy":
             cu_make = compile_mode(compiled.cu, "cu-numpy")
             if cu_make is None:
@@ -268,6 +293,9 @@ def run(compiled, memory: Dict[str, np.ndarray],
             desc = [ev for ev in ladder.events if ev.outcome == "descend"]
             fallback_reason = desc[-1].cause if desc else None
 
+    forward_reason = (stats.pop("fwd_refusal_reason", None)
+                      if isinstance(stats, dict) else None)
+
     return CodegenRun(target, target_used, info, stats, fallback_reason,
                       streams_box.get("s"), used_cu, vector_reason,
-                      ladder.events)
+                      forward_reason, ladder.events)

@@ -74,6 +74,16 @@ class UniformLoop:
     k_loads: Dict[str, int] = field(default_factory=dict)
     k_stores: Dict[str, int] = field(default_factory=dict)
     n_ops: int = 0               # per-iteration op count (step accounting)
+    #: arrays whose single store slot is an associative update of exactly
+    #: one load slot (``value = consume_ld + delta`` through a pure
+    #: ``+``-spine) -> that chain load's slot index.  These are the
+    #: candidates for segmented-scan RAW forwarding
+    #: (:mod:`repro.codegen.epochs`); the vector driver still applies
+    #: its dynamic legality checks per epoch.
+    fwd_chains: Dict[str, int] = field(default_factory=dict)
+    #: per-array reason an array with both loads and stores is *not* a
+    #: forwarding candidate (diagnostics for ``CodegenRun.forward_reason``)
+    fwd_reasons: Dict[str, str] = field(default_factory=dict)
 
 
 @dataclass
@@ -98,10 +108,12 @@ class SliceAnalysis:
 
     @property
     def streamable(self) -> bool:
+        """True when the AGU may legally run ahead as a stream schedule."""
         return self.stream_reason is None
 
     @property
     def vectorizable(self) -> bool:
+        """True when the CU proved iteration-uniform (cu-vector eligible)."""
         return self.uniform_loops is not None
 
 
@@ -338,8 +350,87 @@ def _classify_loop(fn: Function, cfg, h: str):
     if why is not None:
         return None, why
 
+    fwd_chains, fwd_reasons = _chain_slots(fn, order, k_loads, k_stores)
     return UniformLoop(h, body_t, latch, exit_t, iv, bound, order,
-                       k_loads, k_stores, n_ops), None
+                       k_loads, k_stores, n_ops, fwd_chains,
+                       fwd_reasons), None
+
+
+def _chain_slots(fn: Function, order: List[str],
+                 k_loads: Dict[str, int], k_stores: Dict[str, int]
+                 ) -> Tuple[Dict[str, int], Dict[str, str]]:
+    """Classify associative store-update chains (the forwardable shape).
+
+    For each decoupled array with exactly one store slot and at least one
+    load slot per iteration, walk every committing store site's value
+    back through the pure ``+``-spine of its def chain: a def that is a
+    ``consume_ld`` of the same array contributes its slot, a ``+``
+    recurses into both operands, and anything else (``*``, ``select``,
+    loads of other arrays, loop-invariants) is an additive leaf that
+    contributes nothing.  The array is a forwarding candidate exactly
+    when every site reaches **one** common slot — the chain slot whose
+    lane the vector driver subtracts to obtain the per-store delta.
+    Non-``+`` dependence on *other* slots (spmv's ``y + v*x``) is fine:
+    it only slows fixpoint convergence, never soundness, which rests on
+    the driver's dynamic address/position checks.
+    """
+    region = set(order)
+    defs: Dict[str, Any] = {}
+    ld_slot: Dict[int, int] = {}
+    produce_vals: Dict[str, List[Any]] = {}
+    block_in: Dict[str, Dict[str, Tuple[int, int]]] = {order[0]: {}}
+    for b in order:
+        off = dict(block_in.get(b, {}))
+        for i in fn.blocks[b].body:
+            if i.dest is not None:
+                defs[i.dest] = i
+            if i.op == "consume_ld":
+                ld, st = off.get(i.array, (0, 0))
+                ld_slot[id(i)] = ld
+                off[i.array] = (ld + 1, st)
+            elif i.op in ("produce_st", "poison_st"):
+                ld, st = off.get(i.array, (0, 0))
+                off[i.array] = (ld, st + 1)
+                if i.op == "produce_st":
+                    produce_vals.setdefault(i.array, []).append(i.args[0])
+        for t in fn.blocks[b].term.succs():
+            if t in region:
+                block_in.setdefault(t, off)
+
+    def spine(v, a: str) -> Set[int]:
+        if not isinstance(v, str):
+            return set()
+        i = defs.get(v)
+        if i is None:
+            return set()
+        if i.op == "consume_ld" and i.array == a:
+            return {ld_slot[id(i)]}
+        if i.op == "bin" and i.args[0] == "+":
+            return spine(i.args[1], a) | spine(i.args[2], a)
+        return set()
+
+    chains: Dict[str, int] = {}
+    reasons: Dict[str, str] = {}
+    for a in sorted(set(k_loads) | set(k_stores)):
+        if not k_stores.get(a) or not k_loads.get(a):
+            continue  # no in-epoch RAW possible, nothing to forward
+        if k_stores[a] != 1:
+            reasons[a] = (f"{k_stores[a]} store slots per iteration "
+                          f"(not a single associative chain)")
+            continue
+        sites = produce_vals.get(a, [])
+        if not sites:
+            reasons[a] = "store slot never commits (all sites poison)"
+            continue
+        slots = [spine(v, a) for v in sites]
+        if any(len(s) != 1 for s in slots) or len({next(iter(s))
+                                                  for s in slots
+                                                  if len(s) == 1}) != 1:
+            reasons[a] = ("store value is not an additive update of "
+                          "exactly one load slot")
+            continue
+        chains[a] = next(iter(slots[0]))
+    return chains, reasons
 
 
 def _topo(fn: Function, region: Set[str], entry: str) -> Optional[List[str]]:

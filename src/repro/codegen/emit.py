@@ -114,6 +114,7 @@ def emit_source(fn: Function, mode: str) -> Optional[str]:
     emit = lines.append
 
     def val(a) -> str:
+        """Emit an operand: register symbol or immediate literal."""
         return sym(a) if isinstance(a, str) else repr(a)
 
     # -- inventory -----------------------------------------------------------
@@ -342,6 +343,7 @@ def emit_source(fn: Function, mode: str) -> Optional[str]:
             # finally-flush — a raising run must leave memory pristine.
             if mode == "agu-stream":
                 def dmap(stem: str) -> str:
+                    """Emit a per-array dict literal over the decoupled set."""
                     return ("{" + ", ".join(f"{a!r}: {stem}_{sym(a)}"
                                             for a in dec_arrays) + "}")
                 emit(f"{ind}return _Streams(ld_raw={dmap('_ldr')}, "
@@ -496,6 +498,7 @@ def _emit_scalar_block(fn, bname, blk, sym, blk_id, emit, ind,
     """Non-loop block in cu-vector mode: scalar ops over numpy locals."""
 
     def val(a) -> str:
+        """Emit an operand: register symbol or immediate literal."""
         return sym(a) if isinstance(a, str) else repr(a)
 
     emitted_any = False
@@ -588,9 +591,20 @@ def _emit_scalar_block(fn, bname, blk, sym, blk_id, emit, ind,
 
 
 def _emit_vector_loop(fn, ul, lid, sym, blk_id, emit, ind) -> None:
-    """Epoch section for one iteration-uniform loop, at its header's id."""
+    """Epoch section for one iteration-uniform loop, at its header's id.
+
+    The if-converted region is wrapped in a ``_body(_ld)`` closure so the
+    driver can re-evaluate the whole epoch under *forwarded* load
+    estimates (the segmented-scan RAW fixpoint — see
+    :mod:`repro.codegen.epochs`): ``_body`` takes the per-array load
+    lanes, returns the store slot lanes plus the deferred local-array
+    stores, and must stay pure with respect to pre-epoch state (local
+    arrays are only read; their stores are applied after the commit cut,
+    for exactly the retired prefix).
+    """
 
     def val(a) -> str:
+        """Emit an operand: register symbol or immediate literal."""
         return sym(a) if isinstance(a, str) else repr(a)
 
     hb = fn.blocks[ul.header]
@@ -609,15 +623,17 @@ def _emit_vector_loop(fn, ul, lid, sym, blk_id, emit, ind) -> None:
     emit(f"{ind}while _t0 < _T:")
     ind2 = ind + "    "
     emit(f"{ind2}_m = _drv.plan({lid}, _T - _t0)")
-    emit(f"{ind2}_ld = _drv.gather({lid}, _m)")
-    emit(f"{ind2}{sym(ul.iv)} = _iv0 + _t0 + _np.arange(_m)")
+    emit(f"{ind2}_ld0 = _drv.gather({lid}, _m)")
+    emit(f"{ind2}def _body(_ld):")
+    bind = ind2 + "    "
+    emit(f"{bind}{sym(ul.iv)} = _iv0 + _t0 + _np.arange(_m)")
 
     # per-slot accumulators: value lanes and poison-mask lanes
     slot_arrays = sorted(a for a, s in ul.k_stores.items() if s)
     for a in slot_arrays:
         for s in range(ul.k_stores[a]):
-            emit(f"{ind2}_sv_{sym(a)}_{s} = 0")
-            emit(f"{ind2}_sp_{sym(a)}_{s} = False")
+            emit(f"{bind}_sv_{sym(a)}_{s} = 0")
+            emit(f"{bind}_sp_{sym(a)}_{s} = False")
 
     # if-converted region: block predicates, straight-line lanes
     pred_of: Dict[str, str] = {}
@@ -629,12 +645,12 @@ def _emit_vector_loop(fn, ul, lid, sym, blk_id, emit, ind) -> None:
         blk = fn.blocks[bname]
         pv = f"_p{bi}"
         if bi == 0:
-            emit(f"{ind2}{pv} = True")
+            emit(f"{bind}{pv} = True")
         else:
             terms = in_edges[bname]
-            emit(f"{ind2}{pv} = {terms[0]}")
+            emit(f"{bind}{pv} = {terms[0]}")
             for t in terms[1:]:
-                emit(f"{ind2}{pv} = {pv} | {t}")
+                emit(f"{bind}{pv} = {pv} | {t}")
         pred_of[bname] = pv
 
         lo = dict(loff[bname])
@@ -642,18 +658,18 @@ def _emit_vector_loop(fn, ul, lid, sym, blk_id, emit, ind) -> None:
         for instr in blk.body:
             op = instr.op
             if op == "const":
-                emit(f"{ind2}{sym(instr.dest)} = {instr.args[0]!r}")
+                emit(f"{bind}{sym(instr.dest)} = {instr.args[0]!r}")
             elif op == "bin":
                 o, a, b = instr.args
                 expr = _VECOP_EXPR[o].format(a=val(a), b=val(b))
-                emit(f"{ind2}{sym(instr.dest)} = {expr}")
+                emit(f"{bind}{sym(instr.dest)} = {expr}")
             elif op == "select":
                 c, a, b = instr.args
-                emit(f"{ind2}{sym(instr.dest)} = "
+                emit(f"{bind}{sym(instr.dest)} = "
                      f"_vsel({val(c)}, {val(a)}, {val(b)})")
             elif op == "load":
                 s = sym(instr.array)
-                emit(f"{ind2}{sym(instr.dest)} = "
+                emit(f"{bind}{sym(instr.dest)} = "
                      f"_vload(_loc_{s}, {val(instr.args[0])}, _hi_{s})")
             elif op == "store":
                 s = sym(instr.array)
@@ -663,21 +679,21 @@ def _emit_vector_loop(fn, ul, lid, sym, blk_id, emit, ind) -> None:
                 k = lo.get(instr.array, 0)
                 lo[instr.array] = k + 1
                 kk = ul.k_loads[instr.array]
-                emit(f"{ind2}{sym(instr.dest)} = "
+                emit(f"{bind}{sym(instr.dest)} = "
                      f"_ld[{instr.array!r}][{k}::{kk}]")
             elif op == "produce_st":
                 s = so.get(instr.array, 0)
                 so[instr.array] = s + 1
                 t = f"_sv_{sym(instr.array)}_{s}"
-                emit(f"{ind2}{t} = _vwhere({pv}, "
+                emit(f"{bind}{t} = _vwhere({pv}, "
                      f"{val(instr.args[0])}, {t})")
             elif op == "poison_st":
                 s = so.get(instr.array, 0)
                 so[instr.array] = s + 1
                 t = f"_sp_{sym(instr.array)}_{s}"
-                emit(f"{ind2}{t} = {t} | {pv}")
+                emit(f"{bind}{t} = {t} | {pv}")
             elif op == "print":
-                emit(f"{ind2}pass")
+                emit(f"{bind}pass")
 
         term = blk.term
         if term.kind == "cbr":
@@ -697,13 +713,17 @@ def _emit_vector_loop(fn, ul, lid, sym, blk_id, emit, ind) -> None:
                 loff.setdefault(t0, lo)
                 soff.setdefault(t0, so)
 
-    commit = "{" + ", ".join(
+    stores = "{" + ", ".join(
         f"{a!r}: (({', '.join(f'_sv_{sym(a)}_{s}' for s in range(ul.k_stores[a]))},), "
         f"({', '.join(f'_sp_{sym(a)}_{s}' for s in range(ul.k_stores[a]))},))"
         for a in slot_arrays) + "}"
-    emit(f"{ind2}_m2 = _drv.commit({lid}, _m, {commit})")
-    for (s, ix, v, pv) in local_stores:
-        emit(f"{ind2}_vstore(_loc_{s}, {ix}, {v}, {pv}, _hi_{s}, _m2)")
+    locs = "[" + ", ".join(
+        f"(_loc_{s}, _hi_{s}, {ix}, {v}, {pv})"
+        for (s, ix, v, pv) in local_stores) + "]"
+    emit(f"{bind}return {stores}, {locs}")
+    emit(f"{ind2}_m2, _locs = _drv.commit({lid}, _m, _body, _ld0)")
+    emit(f"{ind2}for _la, _lh, _lx, _lv, _lp in _locs:")
+    emit(f"{ind2}    _vstore(_la, _lx, _lv, _lp, _lh, _m2)")
     emit(f"{ind2}_t0 += _m2")
     emit(f"{ind2}steps += _m2 * {ul.n_ops}")
     emit(f"{ind2}if steps > _max_steps:")

@@ -28,13 +28,26 @@ the per-element state machine and the vectorised path — plan identically:
   and poison flags are exact, which is what makes the optimistic cut
   sound (see the inline proof sketch on :func:`first_violation`).
 
+* :func:`plan_segments` / :func:`segment_forward` / :func:`combine_runs`
+  — the *segmented-scan forwarding* layer (see ``docs/epochs.md``).  When
+  the committed stores of an epoch form same-address runs that feed later
+  in-window loads only through an associative update (``value = chain
+  load + delta``, the ``spec_scatter_add`` shape), the epoch need not be
+  cut at all: the per-store deltas are sorted into address segments and
+  an exclusive segmented prefix sum forwards the combined value of every
+  older committed store to each in-window load.  The vector drivers
+  (:mod:`repro.codegen.vector`) iterate this to a fixpoint; soundness of
+  the fixpoint is argued on :func:`segment_forward`.
+
 * :func:`bucket` — the power-of-two batch padding shared by every kernel
   call, floored at ``max(8, block_n)`` so a caller-chosen ``block_n``
   never receives a grid smaller than one block.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
 
 #: largest single gather/scatter batch (bounds jit shape variety and the
 #: interpret-mode grid length); epochs longer than this are split.
@@ -42,6 +55,24 @@ MAX_BATCH = 512
 
 #: int32 device-table value range (the jax targets' integer subset)
 I32_MIN, I32_MAX = -(2 ** 31), 2 ** 31 - 1
+
+#: bound on forwarding fixpoint body re-evaluations per epoch.  Two
+#: passes suffice when the per-store delta does not depend on the
+#: forwarded loads (hist: ``delta = w[i]``) and three when it does only
+#: through already-exact values (spmv); a window that still has not
+#: converged (e.g. a saturating guard flipping commit masks back and
+#: forth) is refused and the epoch falls back to the sound
+#: :func:`first_violation` cut.
+MAX_FWD_PASSES = 6
+
+#: magnitude bound on any segmented-scan partial sum.  Cross-segment
+#: int64 wraparound cancels exactly in :func:`segment_forward`'s base
+#: subtraction (two's complement), but a *within-segment* partial sum
+#: beyond int64 would corrupt the forwarded estimate silently; partial
+#: sums are therefore shadowed in float64 (absolute error < 2**30 for
+#: MAX_BATCH int64 terms, negligible against this bound) and the scan
+#: refuses past it.
+FWD_SUM_BOUND = float(2 ** 61)
 
 
 def bucket(n: int, block_n: int = 8) -> int:
@@ -158,6 +189,105 @@ def first_violation(m: int, k: int, s: int,
             return (f - lp) // k
         f += 1
     return m
+
+
+def plan_segments(addrs: "np.ndarray", pos: "np.ndarray"
+                  ) -> Tuple["np.ndarray", "np.ndarray"]:
+    """Sort request events into same-address segments, oldest first.
+
+    ``addrs``/``pos`` are parallel int arrays of one epoch's in-window
+    events for a single decoupled array (loads and stores mixed; ``pos``
+    is the per-array combined stream position, so it orders events the
+    way the sequential machine would serve them).  Returns ``(order,
+    starts)``: ``order`` permutes the events into ``(addr, pos)``
+    lexicographic order and ``starts`` flags the first event of each
+    address segment within that order.  All forwarding arithmetic
+    (:func:`segment_forward`, :func:`combine_runs`) keys off this one
+    segmentation so the numpy and jax drivers combine runs identically.
+    """
+    order = np.lexsort((pos, addrs))
+    a_sorted = addrs[order]
+    starts = np.ones(len(a_sorted), dtype=bool)
+    if len(a_sorted) > 1:
+        starts[1:] = a_sorted[1:] != a_sorted[:-1]
+    return order, starts
+
+
+def segment_forward(addrs: "np.ndarray", pos: "np.ndarray",
+                    contrib: "np.ndarray") -> "np.ndarray":
+    """Exclusive per-address prefix sums of ``contrib`` in stream order.
+
+    The segmented scan at the heart of RAW forwarding: event ``e``
+    receives the sum of ``contrib`` over all events at the **same
+    address** with **smaller stream position**.  Load events pass
+    ``contrib = 0`` (pure queries); committed stores pass their delta
+    (``store value - chain load value``), so a load's result is exactly
+    the total committed increment applied to its address by older
+    in-window stores — adding it to the pre-epoch gathered value yields
+    the value the sequential machine would have served.
+
+    Soundness (with the dynamic legality checks made by the driver —
+    every committed store's address equals its iteration's chain-load
+    address, the chain load precedes the store in the per-array stream,
+    and the array is integer-typed so increments compose exactly):
+    within one address segment the committed deltas telescope,
+    ``mem_after(g) = mem_before(g) + delta_g``, so the exclusive prefix
+    sum at a load event reconstructs the exact memory value at that
+    point of the stream.  The drivers iterate body evaluation and this
+    scan to a fixpoint; at the fixpoint the load estimates are
+    self-consistent, and because every store value depends only on
+    same-iteration loads with *smaller* stream position (per-array
+    positions are iteration-monotone), the dependence is strictly
+    triangular in stream order — the fixpoint is unique and equals the
+    sequential semantics.  See ``docs/epochs.md`` for the full argument,
+    including why a non-forwardable array's cut keeps the mixed-array
+    prefix exact.
+
+    Cross-segment int64 wraparound cancels in the base subtraction
+    (two's complement); a genuine within-segment overflow is caught by a
+    float64 shadow of the running sum and raises ``OverflowError`` so
+    the caller refuses forwarding instead of committing garbage.
+    """
+    n = len(addrs)
+    out = np.zeros(n, dtype=np.int64)
+    if n == 0:
+        return out
+    order, starts = plan_segments(addrs, pos)
+    c_sorted = contrib[order]
+    shadow = np.cumsum(c_sorted.astype(np.float64))
+    if np.abs(shadow).max() >= FWD_SUM_BOUND:
+        raise OverflowError("segmented-scan partial sum beyond int64")
+    csum = np.cumsum(c_sorted)
+    excl = csum - c_sorted
+    seg_id = np.cumsum(starts) - 1
+    base = excl[np.flatnonzero(starts)][seg_id]
+    out[order] = excl - base
+    return out
+
+
+def combine_runs(addrs: "np.ndarray", deltas: "np.ndarray"
+                 ) -> Tuple["np.ndarray", "np.ndarray"]:
+    """Total committed delta per distinct address (one row per run).
+
+    The commit-side counterpart of :func:`segment_forward`: given the
+    committed stores of an epoch prefix as ``(addr, delta)`` pairs, the
+    final memory value at each address is ``pre-epoch value + total
+    delta`` (the same telescoping that makes forwarding exact), so one
+    ``np.add.reduceat`` over the sorted runs collapses an arbitrarily
+    long same-address run into a single scatter row.  Returns
+    ``(unique_addrs, totals)`` with ``unique_addrs`` ascending.
+    """
+    if len(addrs) == 0:
+        return (np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64))
+    order = np.argsort(addrs, kind="stable")
+    a_sorted = addrs[order]
+    d_sorted = deltas[order]
+    starts = np.ones(len(a_sorted), dtype=bool)
+    if len(a_sorted) > 1:
+        starts[1:] = a_sorted[1:] != a_sorted[:-1]
+    idx = np.flatnonzero(starts)
+    totals = np.add.reduceat(d_sorted, idx)
+    return a_sorted[idx], totals
 
 
 def last_writer_keep(eff_idx) -> "List[bool]":

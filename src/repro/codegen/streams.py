@@ -49,12 +49,15 @@ class Streams:
 
     @property
     def arrays(self) -> Tuple[str, ...]:
+        """Decoupled array names, in stream-dict order."""
         return tuple(self.ld_raw)
 
     @property
     def n_loads(self) -> int:
+        """Total load requests across all arrays."""
         return sum(len(v) for v in self.ld_raw.values())
 
     @property
     def n_stores(self) -> int:
+        """Total store requests across all arrays."""
         return sum(len(v) for v in self.st_addrs.values())

@@ -27,7 +27,16 @@ class GenProgram:
 
 
 def generate(seed: int, n_iter: int = 48, max_depth: int = 3,
-             max_items: int = 3) -> GenProgram:
+             max_items: int = 3, assoc_chains: bool = False) -> GenProgram:
+    """One random single-loop program (seeded, deterministic).
+
+    ``assoc_chains=True`` biases generation toward the reduction shape
+    the vector backend's segmented-scan forwarding targets: every
+    decoupled store becomes a load/add/store chain on the same index
+    (``x = A[ix]; A[ix] = x + c``) and index arrays are drawn from a
+    small range so same-address runs are long — heavy committed-RAW
+    pressure with an associative escape hatch.
+    """
     rng = np.random.RandomState(seed)
     N = int(n_iter)
 
@@ -44,8 +53,9 @@ def generate(seed: int, n_iter: int = 48, max_depth: int = 3,
         "A": rng.randint(-5, 12, N).astype(np.int64)}
     if two_arrays:
         mem["B"] = rng.randint(-5, 12, N).astype(np.int64)
+    hi_idx = max(2, N // 6) if assoc_chains else N
     for k in range(n_idx):
-        mem[f"idx{k}"] = rng.randint(0, N, N).astype(np.int64)
+        mem[f"idx{k}"] = rng.randint(0, hi_idx, N).astype(np.int64)
 
     decoupled = {"A"} | ({"B"} if two_arrays and rng.randint(0, 2) else set())
 
@@ -108,9 +118,21 @@ def generate(seed: int, n_iter: int = 48, max_depth: int = 3,
                 n_req[0] += 1
             elif choice == 1:  # decoupled store
                 arr = _pick_dec(rng, decoupled)
-                blk.store(arr, rand_index(blk, avail),
-                          rand_value(blk, avail))
-                n_req[0] += 1
+                if assoc_chains:
+                    # associative read-modify-write on one address:
+                    # x = arr[ix]; arr[ix] = x + c
+                    ix = rand_index(blk, avail)
+                    x = fresh("a")
+                    blk.load(x, arr, ix)
+                    v = fresh("v")
+                    blk.bin(v, "+", x, f"c{rng.randint(2, 8)}")
+                    blk.store(arr, ix, v)
+                    avail.append(x)
+                    n_req[0] += 2
+                else:
+                    blk.store(arr, rand_index(blk, avail),
+                              rand_value(blk, avail))
+                    n_req[0] += 1
             elif choice == 2 and depth < max_depth:  # nested if
                 cond = _rand_cond(rng, blk, avail, fresh)
                 tname, jname = fresh("t."), fresh("j.")

@@ -269,6 +269,39 @@ def test_gate_require_present_sections_pass(tmp_path, capsys):
     capsys.readouterr()
 
 
+def _write_derived(path, rows):
+    path.write_text(json.dumps(
+        [{"name": n, "us_per_call": us, "derived": d}
+         for n, us, d in rows]))
+    return str(path)
+
+
+def test_gate_require_derived_key(tmp_path, capsys):
+    """'section.key' --require entries reach into the derived string:
+    missing-from-new fails, numeric regressions beyond tolerance fail,
+    stable counters and keys new to this run pass."""
+    base = _write_derived(tmp_path / "base.json",
+                          [("cg", 100.0, "hist_calls=2,min=0.04x")])
+    new = _write_derived(tmp_path / "new.json",
+                         [("cg", 100.0, "hist_calls=2,min=0.05x,extra=1")])
+    assert bench_compare.main([new, "--baseline", base,
+                               "--require", "cg,cg.hist_calls"]) == 0
+    # a key the baseline predates only warns
+    assert bench_compare.main([new, "--baseline", base,
+                               "--require", "cg.extra"]) == 0
+    capsys.readouterr()
+    # missing from the new file: loud failure
+    with pytest.raises(SystemExit, match=r"cg\.nope.*missing"):
+        bench_compare.main([new, "--baseline", base,
+                            "--require", "cg.nope"])
+    # a count regression fails even though wall time is identical
+    worse = _write_derived(tmp_path / "worse.json",
+                           [("cg", 100.0, "hist_calls=38")])
+    with pytest.raises(SystemExit, match=r"cg\.hist_calls.*regressed"):
+        bench_compare.main([worse, "--baseline", base,
+                            "--require", "cg.hist_calls"])
+
+
 # ---------------------------------------------------------------------------
 # DAE_TEST_SEED — the single fallback-seed knob
 # ---------------------------------------------------------------------------

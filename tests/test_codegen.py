@@ -1013,23 +1013,27 @@ def _run(memory, _params, _drv, _max_steps):
             _t0 = 0
             while _t0 < _T:
                 _m = _drv.plan(0, _T - _t0)
-                _ld = _drv.gather(0, _m)
-                v5 = _iv0 + _t0 + _np.arange(_m)
-                _sv_v12_0 = 0
-                _sp_v12_0 = False
-                _p0 = True
-                v3 = _ld['A'][0::1]
-                v8 = _vlt(v3, v2)
-                v10 = _vload(_loc_v0, v5, _hi_v0)
-                v9 = _vadd(v3, v10)
-                _p1 = _band(_p0, v8)
-                _sv_v12_0 = _vwhere(_p1, v9, _sv_v12_0)
-                _p2 = _bnot(_p0, v8)
-                _sp_v12_0 = _sp_v12_0 | _p2
-                _p3 = _p1
-                _p3 = _p3 | _p2
-                v6 = _vadd(v5, v7)
-                _m2 = _drv.commit(0, _m, {'A': ((_sv_v12_0,), (_sp_v12_0,))})
+                _ld0 = _drv.gather(0, _m)
+                def _body(_ld):
+                    v5 = _iv0 + _t0 + _np.arange(_m)
+                    _sv_v12_0 = 0
+                    _sp_v12_0 = False
+                    _p0 = True
+                    v3 = _ld['A'][0::1]
+                    v8 = _vlt(v3, v2)
+                    v10 = _vload(_loc_v0, v5, _hi_v0)
+                    v9 = _vadd(v3, v10)
+                    _p1 = _band(_p0, v8)
+                    _sv_v12_0 = _vwhere(_p1, v9, _sv_v12_0)
+                    _p2 = _bnot(_p0, v8)
+                    _sp_v12_0 = _sp_v12_0 | _p2
+                    _p3 = _p1
+                    _p3 = _p3 | _p2
+                    v6 = _vadd(v5, v7)
+                    return {'A': ((_sv_v12_0,), (_sp_v12_0,))}, []
+                _m2, _locs = _drv.commit(0, _m, _body, _ld0)
+                for _la, _lh, _lx, _lv, _lp in _locs:
+                    _vstore(_la, _lx, _lv, _lp, _lh, _m2)
                 _t0 += _m2
                 steps += _m2 * 7
                 if steps > _max_steps:
@@ -1048,9 +1052,164 @@ def _run(memory, _params, _drv, _max_steps):
 def test_golden_cu_vector_emission():
     """The vectorised CU text is pinned exactly: the bound test collapses
     to `_T`, `consume_ld` is a strided view of one gather, the cbr is
-    predicate arithmetic, and the poison slot is a mask lane."""
+    predicate arithmetic, the poison slot is a mask lane, and the whole
+    if-converted region is a re-evaluable `_body(_ld)` closure so the
+    driver can iterate it to a forwarding fixpoint."""
     assert codegen.emit_source(_golden_vec_cu(), "cu-vector") == \
         GOLDEN_CU_VECTOR
     # emission is deterministic
     assert codegen.emit_source(_golden_vec_cu(), "cu-vector") == \
         codegen.emit_source(_golden_vec_cu(), "cu-vector")
+
+
+# ---------------------------------------------------------------------------
+# segmented-scan RAW forwarding (same-address stress)
+# ---------------------------------------------------------------------------
+
+
+def _stress_cases():
+    """Worst-case committed-RAW workloads: every iteration aliases the
+    previous one, so without forwarding each epoch cuts to ~1."""
+    hist1 = ALL["hist"](n=96, n_bins=8)
+    hist1.memory["bins"][:] = 0                 # every update hits H[0]
+    hist_sat = ALL["hist"](n=96, n_bins=4, max_count=8)
+    hist_sat.memory["bins"][:] = 0              # ...and saturates mid-run
+    dense = ALL["spmv"](n=12, density=1.0, x_zero_rate=0.0)
+    dense.memory["row"][:] = 0                  # all updates hit y[0]
+    coll = ALL["sort"](n=16)
+    coll.memory["a"][:] = coll.memory["a"] % 2  # heavy key collisions
+    return {"hist-onebin": hist1, "hist-saturate": hist_sat,
+            "spmv-dense-row": dense, "sort-collide": coll}
+
+
+@pytest.mark.parametrize("cu_mode", ["state-machine", "vector"])
+@pytest.mark.parametrize("target", ["numpy", "jax"])
+@pytest.mark.parametrize("sname", sorted(_stress_cases()))
+def test_forwarding_stress_matrix_exact(sname, target, cu_mode):
+    """Same-address stress through the full mode x target matrix: the
+    forwarded epochs must stay bit-identical to the interpreter."""
+    case = _stress_cases()[sname]
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    ref = _interp_ref(case)
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    kw = {"interpret": True} if target == "jax" else {}
+    r = codegen.run(comp, mem, case.params, target=target, cu_mode=cu_mode,
+                    **kw)
+    _assert_exact(ref, mem, f"{sname}/{target}/{cu_mode}")
+    assert r.target_used == target and r.cu_mode == cu_mode, \
+        r.vector_reason
+    if cu_mode != "vector":
+        return
+    if sname == "sort-collide":
+        # two store slots per iteration: not an associative chain — the
+        # refusal must be recorded, and the epoch falls back to the cut
+        assert r.stats["fwd_epochs"] == 0
+        assert r.stats["fwd_refusals"] > 0
+        assert "store slots" in r.forward_reason
+    else:
+        # the whole run collapses to forwarded epochs: the epoch count
+        # must not scale with the same-address run length
+        assert r.stats["fwd_epochs"] > 0, r.forward_reason
+        assert r.stats["epochs"] <= 2, r.stats
+
+
+@pytest.mark.parametrize("target", ["numpy", "jax"])
+def test_forwarding_off_matches_and_costs_more_epochs(target):
+    """forward=False restores cut-per-hazard epochs (still exact); the
+    epoch count with forwarding must be >=5x smaller on the stress
+    workloads, and on jax so must the kernel-call count."""
+    for sname in ("hist-onebin", "spmv-dense-row"):
+        case = _stress_cases()[sname]
+        comp = pipeline.compile_spec(case.fn, case.decoupled)
+        ref = _interp_ref(case)
+        kw = {"interpret": True} if target == "jax" else {}
+        runs = {}
+        for fwd in (True, False):
+            mem = {k: v.copy() for k, v in case.memory.items()}
+            r = codegen.run(comp, mem, case.params, target=target,
+                            cu_mode="vector", forward=fwd, **kw)
+            _assert_exact(ref, mem, f"{sname}/{target}/forward={fwd}")
+            assert r.cu_mode == "vector", r.vector_reason
+            runs[fwd] = r
+        assert runs[False].forward_reason == \
+            "forwarding disabled (forward=False)"
+        assert runs[False].stats["epochs"] >= \
+            5 * runs[True].stats["epochs"], sname
+        if target == "jax":
+            calls = {f: runs[f].stats["gather_calls"]
+                     + runs[f].stats["scatter_calls"] for f in runs}
+            assert calls[False] >= 5 * calls[True], (sname, calls)
+
+
+def test_forwarding_stats_match_state_machine():
+    """Forwarded epochs retire exactly the state machine's traffic."""
+    for sname, case in _stress_cases().items():
+        comp = pipeline.compile_spec(case.fn, case.decoupled)
+        runs = {}
+        for cu_mode in ("state-machine", "vector"):
+            mem = {k: v.copy() for k, v in case.memory.items()}
+            runs[cu_mode] = codegen.run(comp, mem, case.params,
+                                        target="numpy",
+                                        cu_mode=cu_mode).stats
+        for key in ("stores_committed", "stores_poisoned",
+                    "loads_consumed", "ld_leftover", "st_leftover"):
+            assert runs["vector"][key] == runs["state-machine"][key], \
+                (sname, key)
+
+
+@pytest.mark.parametrize("leg", ["numpy-vector", "jax"])
+def test_randprog_assoc_sweep_matches_interp(leg):
+    """32-seed randprog sweep with associative-chain generation: long
+    same-address runs through read-modify-write chains.  Every program
+    stays bit-identical, and the sweep must actually forward somewhere."""
+    target = "numpy" if leg.startswith("numpy") else "jax"
+    kw = {"cu_mode": "vector"} if leg == "numpy-vector" else {}
+    if target == "jax":
+        kw["interpret"] = True
+    fwd_epochs = 0
+    for seed in _randprog_cases():
+        g = randprog.generate(seed % (2 ** 31), assoc_chains=True)
+        for pname, cf in COMPILERS.items():
+            comp = cf(g.fn, g.decoupled)
+            ref = {k: v.copy() for k, v in g.memory.items()}
+            interp.run(g.fn, ref)
+            mem = {k: v.copy() for k, v in g.memory.items()}
+            r = codegen.run(comp, mem, target=target, **kw)
+            fwd_epochs += r.stats.get("fwd_epochs", 0)
+            _assert_exact(ref, mem, f"randprog-assoc{seed}/{pname}/{leg}")
+    assert fwd_epochs > 0
+
+
+def test_forwarding_refusal_degrades_through_ladder():
+    """A stalled epoch whose forwarding was refused still descends the
+    ladder to the state machine, with the refusal in the stall cause."""
+    case = _stress_cases()["sort-collide"]
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    ref = _interp_ref(case)
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    r = codegen.run(comp, mem, case.params, target="numpy", cu_mode="auto")
+    _assert_exact(ref, mem, "sort-collide/auto")
+    # auto on numpy keeps the state machine; pin vector on a kernel that
+    # stalls at epoch start (same-iteration store-then-load, two store
+    # slots so the chain classifier refuses) to see the ladder descend
+    f = Function("stall")
+    f.array("A", 16)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(8, "N"))
+    b.bin("v", "+", "i", "one")
+    b.store("A", "i", "v")
+    b.load("x", "A", "i")            # reads the store of this iteration
+    b.bin("y", "+", "x", "one")
+    b.store("A", "v", "y")           # second slot: kills the chain
+    b.br(nest.latch)
+    nest.finish()
+    mem2 = {"A": np.arange(16, dtype=np.int64)}
+    ref2 = {"A": mem2["A"].copy()}
+    interp.run(f, ref2)
+    comp2 = pipeline.compile_spec(f, {"A"})
+    m2 = {k: v.copy() for k, v in mem2.items()}
+    r2 = codegen.run(comp2, m2, target="numpy", cu_mode="vector")
+    _assert_exact(ref2, m2, "stall-chainless/vector-pinned")
+    assert r2.fell_back
+    assert "stalled" in r2.fallback_reason
+    assert "forwarding refused" in r2.fallback_reason

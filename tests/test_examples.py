@@ -47,3 +47,6 @@ def test_dae_codegen_demo(capsys):
     assert "bit-identical to interp: True" in out
     assert "fallback: AGU is value-dependent" in out
     assert "pure-address" in out
+    # the forwarding A/B ran: off scales with the run, on collapses
+    assert "forward=False" in out and "forward=True" in out
+    assert "forward=True  epochs=  1" in out
