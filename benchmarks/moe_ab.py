@@ -1,6 +1,14 @@
 """A/B: speculative MoE dispatch (the paper's technique) vs the dense
 if-converted baseline, inside the framework — FLOPs and wall-time on the
 smoke config, plus the capacity/mis-spec sweep (the MoE Table-2 analogue).
+
+``dae_serve`` is the serving edition: the same A/B driven end-to-end
+through :class:`repro.serve.engine.Engine` under the continuous-traffic
+harness (:mod:`repro.serve.traffic`) — spec-kernel (Pallas
+spec_gather/spec_scatter_add dispatch) vs the lax-scatter reference vs
+dense, with committed tokens asserted **bit-exact** across the spec paths
+before any timing, and p50/p95 latency, throughput, and exact poison
+counts as the derived metrics the CI bench gate requires.
 """
 from __future__ import annotations
 
@@ -8,6 +16,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import get, smoke
 from repro.models import moe
@@ -74,5 +83,70 @@ def main() -> str:
             f"misspec_time_spread={flat:.2f}x")
 
 
+def dae_serve(quick: bool = False) -> str:
+    """Serving A/B under continuous traffic; returns the derived string.
+
+    Correctness gates before timing: the spec-kernel engine's committed
+    tokens must be bit-identical to the lax-scatter reference engine on a
+    fixed deterministic request set (shared params).  The ``poison``
+    derived key is that deterministic phase's exact poisoned-dispatch
+    count — stable across runs, so ``compare.py --require
+    dae_serve.poison`` can gate it numerically; latency/throughput keys
+    are reported but not numerically gated (timing-noisy).
+    """
+    from repro.serve.engine import Engine, Request
+    from repro.serve.traffic import TrafficConfig, run_traffic
+
+    cfg = smoke(get("kimi_k2_1t_a32b"))
+    max_len = 32
+    ref_eng = Engine(cfg, slots=4, max_len=max_len, dispatch="spec")
+    engines = {"spec": ref_eng}
+    for d in ("spec-kernel", "dense"):
+        engines[d] = Engine(cfg, ref_eng.params, slots=4, max_len=max_len,
+                            dispatch=d)
+
+    def fixed_requests():
+        rng = np.random.default_rng(0)
+        return [Request(rid=i,
+                        prompt=rng.integers(1, cfg.vocab,
+                                            size=4 + (i % 3)).astype(np.int32),
+                        max_new=4)
+                for i in range(6)]
+
+    # --- correctness before timing: committed tokens bit-exact ------------
+    ref = engines["spec"].run(fixed_requests())
+    kern = engines["spec-kernel"].run(fixed_requests())
+    assert kern == ref, (
+        "spec-kernel committed tokens diverge from the lax reference")
+    poison = sum(w.moe_poison for w in engines["spec-kernel"].wave_stats)
+    issued = sum(w.moe_requests for w in engines["spec-kernel"].wave_stats)
+    print(f"bit-exact: spec-kernel == lax reference on "
+          f"{sum(len(v) for v in ref.values())} committed tokens "
+          f"(poison {poison}/{issued} dispatch requests)")
+
+    # --- traffic: Poisson arrivals, ragged lengths, slot churn ------------
+    tc = TrafficConfig(n_requests=8 if quick else 24, rate=200.0,
+                       prompt_len=(4, 6) if quick else (4, 12),
+                       max_new=(2, 4) if quick else (2, 8), seed=1)
+    reports = {}
+    hdr = (f"{'dispatch':>12s} {'p50 ms':>9s} {'p95 ms':>9s} "
+           f"{'tok/s':>8s} {'poison':>7s} {'trunc':>6s} {'failed':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for name, eng in engines.items():
+        r = run_traffic(eng, tc)
+        reports[name] = r
+        print(f"{name:>12s} {r.p50_ms:9.1f} {r.p95_ms:9.1f} "
+              f"{r.tok_s:8.1f} {r.moe_poison:7d} {r.n_truncated:6d} "
+              f"{r.n_failed:7d}")
+    k, d = reports["spec-kernel"], reports["dense"]
+    return (f"bitexact=True,p50_ms={k.p50_ms:.1f},p95_ms={k.p95_ms:.1f},"
+            f"tok_s={k.tok_s:.1f},poison={poison},"
+            f"poison_rate={k.poison_rate:.4f},"
+            f"spec_vs_dense={d.p50_ms / max(k.p50_ms, 1e-9):.2f}x")
+
+
 if __name__ == "__main__":
     main()
+    print()
+    print(dae_serve())

@@ -188,6 +188,18 @@ def _run_sections(args) -> None:
         repeats=8 if quick else 40, budget_s=0.5 if quick else 4.0))
     rows.append(("dae_chaos", usch, ch))
 
+    print()
+    print("=" * 72)
+    print("Serving A/B — spec-kernel vs lax-scatter vs dense under "
+          "continuous traffic")
+    print("=" * 72)
+    # runs in quick AND full: the bit-exactness assertion and the exact
+    # poison counter are the CI gate for the whole speculative
+    # data-movement layer (compare.py --require dae_serve.poison)
+    from benchmarks import moe_ab as moe_ab_mod
+    sv, ussv = _timed(lambda: moe_ab_mod.dae_serve(quick=quick))
+    rows.append(("dae_serve", ussv, sv))
+
     if not quick:
         # the paper's technique inside the LM framework: MoE dispatch A/B
         print()

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -58,12 +60,24 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                        jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("causal", "bq", "bk", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, bq: int = 128, bk: int = 128,
-                    interpret: bool = True) -> jax.Array:
-    """q,k,v: (B, H, T, d) → (B, H, T, d).  GQA expansion is the caller's."""
+                    interpret: bool | None = None) -> jax.Array:
+    """q,k,v: (B, H, T, d) → (B, H, T, d).  GQA expansion is the caller's.
+
+    ``interpret`` pins the Pallas mode per call (None = backend policy,
+    see :func:`repro.kernels.backend.resolve_interpret`); resolved
+    outside the jitted core so the env knob is read per call.
+    """
+    return _flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def _flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool, bq: int, bk: int,
+                     interpret: bool) -> jax.Array:
     b, h, tq, d = q.shape
     tk = k.shape[2]
     bq = min(bq, tq)

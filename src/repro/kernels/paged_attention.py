@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -59,12 +61,27 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                     jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     page_table: jax.Array, seq_lens: jax.Array, *,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """q: (B,H,d); k_pages/v_pages: (P,page,H,d); page_table: (B,n_max);
-    seq_lens: (B,) → (B,H,d)."""
+    seq_lens: (B,) → (B,H,d).
+
+    ``interpret`` pins the Pallas mode per call (None = backend policy,
+    see :func:`repro.kernels.backend.resolve_interpret`).  Resolution
+    happens *outside* the jitted core so the ``DAE_PALLAS_INTERPRET``
+    env knob is read per call, not baked into the first trace — on a
+    real TPU the old ``interpret: bool = True`` jit-static default
+    silently ran the kernel interpreted.
+    """
+    return _paged_attention(q, k_pages, v_pages, page_table, seq_lens,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     page_table: jax.Array, seq_lens: jax.Array, *,
+                     interpret: bool) -> jax.Array:
     b, h, d = q.shape
     n_max = page_table.shape[1]
     page = k_pages.shape[1]

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import resolve_interpret
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref):
     @pl.when(pl.program_id(3) == 0)
@@ -34,12 +36,23 @@ def _kernel(x_ref, w_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("capacity", "bm", "bn", "bk", "interpret"))
 def ragged_matmul(x: jax.Array, w: jax.Array, *, capacity: int,
                   bm: int = 128, bn: int = 128, bk: int = 256,
-                  interpret: bool = True) -> jax.Array:
-    """x: (E*capacity, D) expert-contiguous; w: (E, D, F) → (E*capacity, F)."""
+                  interpret: bool | None = None) -> jax.Array:
+    """x: (E*capacity, D) expert-contiguous; w: (E, D, F) → (E*capacity, F).
+
+    ``interpret`` pins the Pallas mode per call (None = backend policy,
+    see :func:`repro.kernels.backend.resolve_interpret`); resolved
+    outside the jitted core so the env knob is read per call.
+    """
+    return _ragged_matmul(x, w, capacity=capacity, bm=bm, bn=bn, bk=bk,
+                          interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "bm", "bn", "bk", "interpret"))
+def _ragged_matmul(x: jax.Array, w: jax.Array, *, capacity: int,
+                   bm: int, bn: int, bk: int, interpret: bool) -> jax.Array:
     e, d, f = w.shape
     assert x.shape == (e * capacity, d), (x.shape, w.shape, capacity)
     bm = min(bm, capacity)

@@ -117,12 +117,17 @@ def gqa_attention(params: Dict, x: jax.Array, *, n_heads: int,
                   n_kv_heads: int, head_dim: int, theta: float,
                   pos_offset: int = 0, kv_cache: Optional[Tuple] = None,
                   cache_len=None, cross_kv: Optional[Tuple] = None,
-                  causal: bool = True):
+                  causal: bool = True, pad_len=None):
     """GQA attention block (pre-norm outside).  Returns (out, new_kv).
 
     kv_cache: (k, v) with shape (B, Hkv, Tmax, hd) — decode path appends at
     ``cache_len`` and attends over the valid prefix.
     cross_kv: precomputed (k, v) for cross-attention (enc-dec / VLM).
+    pad_len: (B,) int32, per-row **left-pad** length for the cache path.
+    Pad slots are speculative requests that never commit: RoPE positions
+    count real tokens only (so position 0 lands on the first real token)
+    and the pad columns are poisoned out of every attention read — a
+    batched left-padded request computes exactly what its solo run does.
     """
     b, t, _ = x.shape
     rep = n_heads // n_kv_heads
@@ -141,6 +146,10 @@ def gqa_attention(params: Dict, x: jax.Array, *, n_heads: int,
                        x, params["wv"].reshape(x.shape[-1], n_kv_heads,
                                                head_dim))
         pos = pos_offset + jnp.arange(t)
+        if pad_len is not None:
+            # per-row real-token positions; pad rows clamp to 0 but are
+            # masked out of attention below, so their rotation is dead
+            pos = jnp.maximum(pos[None, :] - pad_len[:, None], 0)
         q = rope(q.transpose(0, 2, 1, 3), pos, theta).transpose(0, 2, 1, 3)
         k = rope(k.transpose(0, 2, 1, 3), pos, theta).transpose(0, 2, 1, 3)
         k = constrain(k, "dp", None, None, None)
@@ -169,7 +178,7 @@ def gqa_attention(params: Dict, x: jax.Array, *, n_heads: int,
         cve = jnp.repeat(cv, rep, axis=1) if rep > 1 else cv
         cke = constrain(cke, "dp", None, "model", None)
         cve = constrain(cve, "dp", None, "model", None)
-        out = _decode_attention(q, cke, cve, cache_len + t)
+        out = _decode_attention(q, cke, cve, cache_len + t, pad_len=pad_len)
         out = out.reshape(b, t, n_heads * head_dim)
     else:
         out = chunked_attention(q, expand(k), expand(v), causal=causal,
@@ -181,10 +190,12 @@ def gqa_attention(params: Dict, x: jax.Array, *, n_heads: int,
 
 
 def _decode_attention(q: jax.Array, ck: jax.Array, cv: jax.Array,
-                      valid_len) -> jax.Array:
+                      valid_len, pad_len=None) -> jax.Array:
     """Few-token attention over a (B, Hkv, Tmax, d) cache with a validity
     mask — speculative full-cache read + poison past the end, causal within
-    the new tokens (multi-token prefill writes then attends the cache)."""
+    the new tokens (multi-token prefill writes then attends the cache).
+    ``pad_len`` ((B,) int32) additionally poisons the left-pad columns at
+    the *start* of the cache, so pads are never attended as real tokens."""
     b, hq, t, d = q.shape
     hkv = ck.shape[1]
     assert hkv == hq, "expand GQA heads before _decode_attention"
@@ -195,7 +206,12 @@ def _decode_attention(q: jax.Array, ck: jax.Array, cv: jax.Array,
     k_pos = jnp.arange(ck.shape[2])                       # (Tmax,)
     q_pos = valid_len - t + jnp.arange(t)                 # (t,)
     ok = k_pos[None, :] <= q_pos[:, None]                 # causal + validity
-    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    if pad_len is not None:
+        alive = k_pos[None, :] >= pad_len[:, None]        # (B, Tmax)
+        ok = ok[None] & alive[:, None]                    # (B, t, Tmax)
+        s = jnp.where(ok[:, None, None], s, NEG_INF)
+    else:
+        s = jnp.where(ok[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhrqk,bhkd->bhrqd", p.astype(cv.dtype), cv)
     return out.reshape(b, hq, t, d).transpose(0, 2, 1, 3)

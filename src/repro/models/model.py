@@ -32,7 +32,10 @@ from . import ssm as ssm_mod
 
 class Model(NamedTuple):
     cfg: ArchConfig
-    dispatch: str  # "spec" (paper technique) | "dense" (STA baseline)
+    # "spec" (paper technique, lax reference) | "spec-kernel" (same dispatch
+    # through the Pallas spec_scatter_add/spec_gather kernels) | "dense"
+    # (STA baseline)
+    dispatch: str
 
     # ------------------------------------------------------------------ init
     def init(self, key: jax.Array) -> Dict:
@@ -135,10 +138,12 @@ class Model(NamedTuple):
     # -------------------------------------------------------------- forward
     def _sublayer(self, kind: str, p: Dict, x: jax.Array, *,
                   pos_offset=0, cross_kv=None, causal=True,
-                  kv_cache=None, cache_len=None, state=None):
+                  kv_cache=None, cache_len=None, state=None,
+                  pad_lens=None, moe_stats=False):
         cfg = self.cfg
         h = L.rms_norm(x, p["ln"])
         new_cache = new_state = None
+        poison = jnp.zeros((), jnp.int32) if moe_stats else None
         if kind == "cross":
             # project the (stubbed) memory with this sublayer's K/V weights;
             # recomputed per step in decode (static memory — a known future
@@ -159,16 +164,25 @@ class Model(NamedTuple):
                 p, h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
                 head_dim=cfg.hd, theta=cfg.rope_theta,
                 pos_offset=pos_offset, causal=causal,
-                kv_cache=kv_cache, cache_len=cache_len)
+                kv_cache=kv_cache, cache_len=cache_len, pad_len=pad_lens)
         elif kind == "mlp":
             out = L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
         elif kind == "moe":
-            fn = (moe_mod.moe_spec if self.dispatch == "spec"
-                  else moe_mod.moe_dense)
             b, t, d = h.shape
-            out = fn(p, h.reshape(b * t, d), n_experts=cfg.n_experts,
-                     top_k=cfg.top_k,
-                     capacity_factor=cfg.capacity_factor).reshape(b, t, d)
+            if self.dispatch == "dense":
+                res = moe_mod.moe_dense(
+                    p, h.reshape(b * t, d), n_experts=cfg.n_experts,
+                    top_k=cfg.top_k, stats=moe_stats)
+            else:
+                res = moe_mod.moe_spec(
+                    p, h.reshape(b * t, d), n_experts=cfg.n_experts,
+                    top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                    kernel=self.dispatch == "spec-kernel", stats=moe_stats)
+            if moe_stats:
+                out, poison = res
+            else:
+                out = res
+            out = out.reshape(b, t, d)
         elif kind == "rwkv":
             res = ssm_mod.rwkv6_block(p, h, n_heads=cfg.d_model // cfg.hd,
                                       head_dim=cfg.hd, state=state,
@@ -181,32 +195,43 @@ class Model(NamedTuple):
             out, new_state = res if state is not None else (res, None)
         else:
             raise ValueError(kind)
-        return x + out, new_cache, new_state
+        return x + out, new_cache, new_state, poison
 
     def _run_groups(self, params: Dict, x: jax.Array, *, pos_offset=0,
                     cross_kv=None, caches=None, cache_len=None,
-                    states=None):
+                    states=None, pad_lens=None, collect_stats=False):
         """Scan the stacked layer groups.  caches/states: stacked pytrees
-        (leading dim = n_groups) or None (training, no cache)."""
+        (leading dim = n_groups) or None (training, no cache).
+
+        ``pad_lens`` ((B,) int32, left-pad length per row) flows to every
+        attention sublayer so padded prompt slots are poisoned rather than
+        attended.  ``collect_stats=True`` appends a summed MoE poison count
+        to the return tuple.
+        """
         cfg = self.cfg
         pattern = group_pattern(cfg)
 
         def group_fn(h, gp, gcache, gstate):
             new_caches, new_states = [], []
+            gpoison = jnp.zeros((), jnp.int32) if collect_stats else None
             for j, kind in enumerate(pattern):
                 p = gp[f"s{j}_{kind}"]
                 kv = gcache[len(new_caches)] if (
                     gcache is not None and kind == "attn") else None
                 st = gstate[len(new_states)] if (
                     gstate is not None and kind in ("rwkv", "mamba")) else None
-                h, nkv, nst = self._sublayer(
+                h, nkv, nst, poison = self._sublayer(
                     kind, p, h, pos_offset=pos_offset, cross_kv=cross_kv,
-                    kv_cache=kv, cache_len=cache_len, state=st)
+                    kv_cache=kv, cache_len=cache_len, state=st,
+                    pad_lens=pad_lens,
+                    moe_stats=collect_stats and kind == "moe")
                 if kind == "attn" and gcache is not None:
                     new_caches.append(nkv)
                 if kind in ("rwkv", "mamba") and gstate is not None:
                     new_states.append(nst)
-            return h, tuple(new_caches), tuple(new_states)
+                if collect_stats and kind == "moe":
+                    gpoison = gpoison + poison
+            return h, tuple(new_caches), tuple(new_states), gpoison
 
         if caches is None and states is None:
             # training: remat each group; scan keeps HLO depth-independent
@@ -218,9 +243,16 @@ class Model(NamedTuple):
 
         def serve_fn(h, inp):
             gp, gcache, gstate = inp
-            h, ncaches, nstates = group_fn(h, gp, gcache, gstate)
-            return h, (ncaches or None, nstates or None)
+            h, ncaches, nstates, gpoison = group_fn(h, gp, gcache, gstate)
+            ys = (ncaches or None, nstates or None)
+            if collect_stats:
+                ys = ys + (gpoison,)
+            return h, ys
 
+        if collect_stats:
+            x, (new_caches, new_states, poison) = jax.lax.scan(
+                serve_fn, x, (params["groups"], caches, states))
+            return x, new_caches, new_states, poison.sum()
         x, (new_caches, new_states) = jax.lax.scan(
             serve_fn, x, (params["groups"], caches, states))
         return x, new_caches, new_states
@@ -301,32 +333,52 @@ class Model(NamedTuple):
         return (tuple(caches) or None, tuple(states) or None)
 
     def decode_step(self, params: Dict, cache, tokens: jax.Array,
-                    cache_len, memory: Optional[jax.Array] = None):
-        """One-token step: tokens (B, 1); cache from init_cache/prefill."""
+                    cache_len, memory: Optional[jax.Array] = None, *,
+                    pad_lens=None, return_stats: bool = False):
+        """One-token step: tokens (B, 1); cache from init_cache/prefill.
+
+        ``pad_lens`` ((B,) int32): per-row left-pad length — padded cache
+        slots are masked out of attention and RoPE positions count real
+        tokens only, so batched decode matches each request's solo run.
+        ``return_stats=True`` appends ``{"moe_poison": ...}`` (summed
+        poisoned MoE dispatch requests this step) to the return tuple.
+        """
         caches, states = cache
         x = jnp.take(params["embed"], tokens, axis=0)
         cross = memory
-        x, ncaches, nstates = self._run_groups(
+        res = self._run_groups(
             params, x, pos_offset=cache_len, cross_kv=cross,
-            caches=caches, cache_len=cache_len, states=states)
+            caches=caches, cache_len=cache_len, states=states,
+            pad_lens=pad_lens, collect_stats=return_stats)
+        x, ncaches, nstates = res[:3]
         x = L.rms_norm(x, params["ln_f"])
         logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+        if return_stats:
+            return logits[:, -1], (ncaches, nstates), {"moe_poison": res[3]}
         return logits[:, -1], (ncaches, nstates)
 
     def prefill(self, params: Dict, tokens: jax.Array, max_len: int,
-                memory: Optional[jax.Array] = None):
-        """Prefill a fresh cache with a full prompt; returns last logits."""
+                memory: Optional[jax.Array] = None, *,
+                pad_lens=None, return_stats: bool = False):
+        """Prefill a fresh cache with a full prompt; returns last logits.
+
+        See :meth:`decode_step` for ``pad_lens`` / ``return_stats``.
+        """
         b, t = tokens.shape
         cache = self.init_cache(b, max_len)
         caches, states = cache
         x = jnp.take(params["embed"], tokens, axis=0)
         if self.cfg.family == "encdec" and memory is not None:
             memory = self._encode(params, memory)
-        x, ncaches, nstates = self._run_groups(
+        res = self._run_groups(
             params, x, pos_offset=0, cross_kv=memory,
-            caches=caches, cache_len=0, states=states)
+            caches=caches, cache_len=0, states=states,
+            pad_lens=pad_lens, collect_stats=return_stats)
+        x, ncaches, nstates = res[:3]
         x = L.rms_norm(x, params["ln_f"])
         logits = jnp.einsum("btd,dv->btv", x[:, -1:], params["lm_head"])
+        if return_stats:
+            return logits[:, -1], (ncaches, nstates), {"moe_poison": res[3]}
         return logits[:, -1], (ncaches, nstates)
 
 

@@ -14,9 +14,25 @@ control-dependent on ``top_k(router(x))`` — a §4 control LoD.  Two paths:
 * ``dispatch="dense"`` (the STA / if-conversion baseline): every token runs
   through **all** experts and results are gated — no speculation, E/top_k×
   the FLOPs.  This is what benchmarks/moe_ab.py compares against.
+* ``dispatch="spec-kernel"`` (``kernel=True`` here): the same speculative
+  slot assignment, but the buffer fill and the combine run through the
+  paper's Pallas kernels — :func:`repro.kernels.spec_scatter.spec_scatter_add`
+  commits the dispatch stores (poisoned slot = ``-1`` index, the kernels'
+  pad-with-poison path) and :func:`repro.kernels.spec_gather.spec_gather`
+  gathers the combine.  Bit-identical to the lax-scatter path by
+  construction (each non-poisoned slot receives exactly one token), which
+  is what ``tests/test_moe_serve.py`` pins — the lax path stays as the
+  differential reference.
 
-The buffers are expert-contiguous with capacity a multiple of the GEMM tile,
-feeding :func:`repro.kernels.ops.ragged_matmul` on TPU.
+The buffers are expert-contiguous with capacity a multiple of the GEMM
+tile; today the expert FFN runs as a batched einsum over the buffer (the
+``ragged_matmul`` tiling is the planned TPU fast path for it, not what
+executes here yet).
+
+``stats=True`` additionally returns the number of **poisoned dispatch
+requests** — capacity overflow, plus non-resident experts under the
+expert-parallel mesh variant — as a traced int32 scalar, so the serving
+engine can report exact per-wave mis-speculation rates.
 """
 from __future__ import annotations
 
@@ -26,7 +42,25 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..kernels.spec_gather import spec_gather
+from ..kernels.spec_scatter import spec_scatter_add
 from .sharding import _current_mesh
+
+
+def _shard_map(fn, *, mesh, in_specs, out_specs):
+    """Version-portable shard_map: ``jax.shard_map`` (with ``check_vma``)
+    on new jax, ``jax.experimental.shard_map`` (``check_rep``) on older
+    releases such as the pinned CI one."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:  # pre-check_vma spelling of the same knob
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
 
 
 def round_capacity(n_tokens: int, n_experts: int, top_k: int,
@@ -56,7 +90,8 @@ def spec_dispatch_indices(gates: jax.Array, experts: jax.Array,
 
 
 def moe_spec(params: Dict, x: jax.Array, *, n_experts: int, top_k: int,
-             capacity_factor: float) -> jax.Array:
+             capacity_factor: float, kernel: bool = False,
+             stats: bool = False):
     """Speculative MoE layer.  x: (N, d) → (N, d).
 
     Under a mesh whose ``model`` axis divides the expert count, dispatch
@@ -65,6 +100,14 @@ def moe_spec(params: Dict, x: jax.Array, *, n_experts: int, top_k: int,
     not resident locally (remote experts = mis-speculations, dropped not
     replayed), computes its local expert FFNs, and one psum over ``model``
     combines — no buffer gathers at all.
+
+    ``kernel=True`` runs the buffer fill / combine through
+    :func:`~repro.kernels.spec_scatter.spec_scatter_add` and
+    :func:`~repro.kernels.spec_gather.spec_gather` (the ``spec-kernel``
+    dispatch mode); ``stats=True`` returns ``(out, poisoned)`` where
+    ``poisoned`` is the global int32 count of poisoned dispatch requests
+    out of ``N * top_k`` (capacity overflow; identical across mesh
+    variants because a request commits on exactly one device).
     """
     mesh = _current_mesh()
     ff = params["w_gate"].shape[-1]
@@ -72,14 +115,17 @@ def moe_spec(params: Dict, x: jax.Array, *, n_experts: int, top_k: int,
             and x.shape[0] % _dp_size(mesh) == 0):
         if n_experts % mesh.shape["model"] == 0:
             return _moe_spec_ep(params, x, n_experts=n_experts, top_k=top_k,
-                                capacity_factor=capacity_factor, mesh=mesh)
+                                capacity_factor=capacity_factor, mesh=mesh,
+                                kernel=kernel, stats=stats)
         if ff % mesh.shape["model"] == 0:
             # few experts (grok: 8 < 16 shards): replicate experts, TP the
             # expert FFN width, dispatch locally per device (§Perf H3)
             return _moe_spec_tp(params, x, n_experts=n_experts, top_k=top_k,
-                                capacity_factor=capacity_factor, mesh=mesh)
+                                capacity_factor=capacity_factor, mesh=mesh,
+                                kernel=kernel, stats=stats)
     return _moe_spec_flat(params, x, n_experts=n_experts, top_k=top_k,
-                          capacity_factor=capacity_factor)
+                          capacity_factor=capacity_factor, kernel=kernel,
+                          stats=stats)
 
 
 def _dp_size(mesh) -> int:
@@ -90,7 +136,8 @@ def _dp_size(mesh) -> int:
 
 
 def _moe_spec_ep(params: Dict, x: jax.Array, *, n_experts: int, top_k: int,
-                 capacity_factor: float, mesh) -> jax.Array:
+                 capacity_factor: float, mesh, kernel: bool = False,
+                 stats: bool = False):
     model_n = mesh.shape["model"]
     e_loc = n_experts // model_n
     dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
@@ -116,8 +163,12 @@ def _moe_spec_ep(params: Dict, x: jax.Array, *, n_experts: int, top_k: int,
         safe = jnp.maximum(slot, 0)
 
         src = jnp.repeat(xl, top_k, axis=0)
-        src = jnp.where(poison[:, None], jnp.zeros_like(src), src)
-        buf = jnp.zeros((e_loc * cap, d), xl.dtype).at[safe].add(src)
+        if kernel:
+            buf = spec_scatter_add(jnp.zeros((e_loc * cap, d), xl.dtype),
+                                   slot, src)
+        else:
+            src = jnp.where(poison[:, None], jnp.zeros_like(src), src)
+            buf = jnp.zeros((e_loc * cap, d), xl.dtype).at[safe].add(src)
 
         bufe = buf.reshape(e_loc, cap, d)
         g = jnp.einsum("ecd,edf->ecf", bufe, wg)
@@ -125,20 +176,28 @@ def _moe_spec_ep(params: Dict, x: jax.Array, *, n_experts: int, top_k: int,
         h = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wd)
         h = h.reshape(e_loc * cap, d)
 
-        gathered = jnp.where(poison[:, None], jnp.zeros((1, d), h.dtype),
-                             h[safe])
+        if kernel:
+            gathered = spec_gather(h, slot)
+        else:
+            gathered = jnp.where(poison[:, None], jnp.zeros((1, d), h.dtype),
+                                 h[safe])
         gg = jnp.where(poison.reshape(-1, top_k), 0.0, gates)
         out = (gathered.reshape(n_loc, top_k, d)
                * gg[..., None].astype(h.dtype)).sum(axis=1)
-        return jax.lax.psum(out, "model")
+        # a request commits on exactly one model shard (its expert's home)
+        # unless it lost the capacity race there, so summing commits over
+        # ``model`` counts each surviving request once — globally identical
+        # to the flat variant's accounting.
+        committed = jax.lax.psum(jnp.sum(slot >= 0), "model")
+        poisoned = jax.lax.psum(n_loc * top_k - committed, dp)
+        return jax.lax.psum(out, "model"), poisoned.astype(jnp.int32)
 
-    out = jax.shard_map(
+    out, poisoned = _shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(None, None), P("model", None, None),
                   P("model", None, None), P("model", None, None),
                   P(dp, None)),
-        out_specs=P(dp, None),
-        check_vma=False,
+        out_specs=(P(dp, None), P()),
     )(params["router"], params["w_gate"], params["w_up"], params["w_down"],
       x)
 
@@ -146,11 +205,12 @@ def _moe_spec_ep(params: Dict, x: jax.Array, *, n_experts: int, top_k: int,
         from .layers import swiglu
         out = out + swiglu(x, params["shared_w_gate"], params["shared_w_up"],
                            params["shared_w_down"])
-    return out
+    return (out, poisoned) if stats else out
 
 
 def _moe_spec_tp(params: Dict, x: jax.Array, *, n_experts: int, top_k: int,
-                 capacity_factor: float, mesh) -> jax.Array:
+                 capacity_factor: float, mesh, kernel: bool = False,
+                 stats: bool = False):
     """Fully-manual variant for expert counts below the model-axis size:
     every device holds ALL experts with a 1/model slice of the FFN width,
     dispatches its local tokens speculatively (capacity poison only), and
@@ -168,8 +228,12 @@ def _moe_spec_tp(params: Dict, x: jax.Array, *, n_experts: int, top_k: int,
         flat = slot.reshape(-1)
         safe = jnp.maximum(flat, 0)
         src = jnp.repeat(xl, top_k, axis=0)
-        src = jnp.where((flat < 0)[:, None], jnp.zeros_like(src), src)
-        buf = jnp.zeros((n_experts * cap, d), xl.dtype).at[safe].add(src)
+        if kernel:
+            buf = spec_scatter_add(jnp.zeros((n_experts * cap, d), xl.dtype),
+                                   flat, src)
+        else:
+            src = jnp.where((flat < 0)[:, None], jnp.zeros_like(src), src)
+            buf = jnp.zeros((n_experts * cap, d), xl.dtype).at[safe].add(src)
 
         bufe = buf.reshape(n_experts, cap, d)
         g = jnp.einsum("ecd,edf->ecf", bufe, wg)     # f is the local slice
@@ -178,29 +242,37 @@ def _moe_spec_tp(params: Dict, x: jax.Array, *, n_experts: int, top_k: int,
         h = jax.lax.psum(h, "model")                 # f-partial sums
         h = h.reshape(n_experts * cap, d)
 
-        gathered = jnp.where((flat < 0)[:, None],
-                             jnp.zeros((1, d), h.dtype), h[safe])
-        return (gathered.reshape(n_loc, top_k, d)
-                * gates[..., None].astype(h.dtype)).sum(axis=1)
+        if kernel:
+            gathered = spec_gather(h, flat)
+        else:
+            gathered = jnp.where((flat < 0)[:, None],
+                                 jnp.zeros((1, d), h.dtype), h[safe])
+        out = (gathered.reshape(n_loc, top_k, d)
+               * gates[..., None].astype(h.dtype)).sum(axis=1)
+        # every model shard dispatches the same replicated tokens, so the
+        # local poison count is already the per-dp-shard total — sum over
+        # the data axes only (summing over ``model`` would multiply-count).
+        poisoned = jax.lax.psum(n_loc * top_k - jnp.sum(flat >= 0), dp)
+        return out, poisoned.astype(jnp.int32)
 
-    out = jax.shard_map(
+    out, poisoned = _shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(None, None), P(None, None, "model"),
                   P(None, None, "model"), P(None, "model", None),
                   P(dp, None)),
-        out_specs=P(dp, None),
-        check_vma=False,
+        out_specs=(P(dp, None), P()),
     )(params["router"], params["w_gate"], params["w_up"], params["w_down"],
       x)
     if "shared_w_gate" in params:
         from .layers import swiglu
         out = out + swiglu(x, params["shared_w_gate"], params["shared_w_up"],
                            params["shared_w_down"])
-    return out
+    return (out, poisoned) if stats else out
 
 
 def _moe_spec_flat(params: Dict, x: jax.Array, *, n_experts: int,
-                   top_k: int, capacity_factor: float) -> jax.Array:
+                   top_k: int, capacity_factor: float, kernel: bool = False,
+                   stats: bool = False):
     """Single-device / meshless speculative dispatch (the reference)."""
     n, d = x.shape
     router_logits = jnp.einsum("nd,de->ne", x, params["router"])
@@ -213,14 +285,22 @@ def _moe_spec_flat(params: Dict, x: jax.Array, *, n_experts: int,
     safe = jnp.maximum(flat_slot, 0)
 
     # --- speculative store into the expert buffer (poison drops) ----------
-    buf = jnp.zeros((n_experts * capacity, d), x.dtype)
     src = jnp.repeat(x, top_k, axis=0)
-    # poisoned requests still reach the memory system but commit nothing:
-    # their payload is zeroed and their (clamped) slot-0 write adds 0.
-    src = jnp.where((flat_slot < 0)[:, None], jnp.zeros_like(src), src)
-    buf = buf.at[safe].add(src)
+    if kernel:
+        # the Pallas scatter drops poisoned requests at commit itself —
+        # bit-identical to the masked lax path because every non-poisoned
+        # slot receives exactly one token (cumsum assignment) and both
+        # paths compute 0 + row.
+        buf = spec_scatter_add(jnp.zeros((n_experts * capacity, d), x.dtype),
+                               flat_slot, src)
+    else:
+        # poisoned requests still reach the memory system but commit
+        # nothing: their payload is zeroed and their (clamped) slot-0
+        # write adds 0.
+        src = jnp.where((flat_slot < 0)[:, None], jnp.zeros_like(src), src)
+        buf = jnp.zeros((n_experts * capacity, d), x.dtype).at[safe].add(src)
 
-    # --- expert FFN over the contiguous buffer (ragged_matmul on TPU) -----
+    # --- expert FFN over the contiguous buffer ----------------------------
     bufe = buf.reshape(n_experts, capacity, d)
     g = jnp.einsum("ecd,edf->ecf", bufe, params["w_gate"])
     u = jnp.einsum("ecd,edf->ecf", bufe, params["w_up"])
@@ -228,8 +308,11 @@ def _moe_spec_flat(params: Dict, x: jax.Array, *, n_experts: int,
     h = h.reshape(n_experts * capacity, d)
 
     # --- combine: gather back, poisoned slots contribute zero -------------
-    gathered = jnp.where((flat_slot < 0)[:, None],
-                         jnp.zeros((1, d), h.dtype), h[safe])
+    if kernel:
+        gathered = spec_gather(h, flat_slot)
+    else:
+        gathered = jnp.where((flat_slot < 0)[:, None],
+                             jnp.zeros((1, d), h.dtype), h[safe])
     out = (gathered.reshape(n, top_k, d)
            * gates[..., None].astype(h.dtype)).sum(axis=1)
 
@@ -237,11 +320,13 @@ def _moe_spec_flat(params: Dict, x: jax.Array, *, n_experts: int,
         from .layers import swiglu
         out = out + swiglu(x, params["shared_w_gate"], params["shared_w_up"],
                            params["shared_w_down"])
+    if stats:
+        return out, jnp.sum(flat_slot < 0).astype(jnp.int32)
     return out
 
 
 def moe_dense(params: Dict, x: jax.Array, *, n_experts: int, top_k: int,
-              **_: object) -> jax.Array:
+              stats: bool = False, **_: object):
     """If-conversion baseline: all tokens × all experts, gated (no spec)."""
     router_logits = jnp.einsum("nd,de->ne", x, params["router"])
     probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
@@ -256,4 +341,8 @@ def moe_dense(params: Dict, x: jax.Array, *, n_experts: int, top_k: int,
         from .layers import swiglu
         out = out + swiglu(x, params["shared_w_gate"], params["shared_w_up"],
                            params["shared_w_down"])
+    if stats:
+        # dense runs every token through every expert — nothing speculated,
+        # nothing poisoned
+        return out, jnp.zeros((), jnp.int32)
     return out

@@ -3,7 +3,16 @@
 Requests join a fixed-slot batch; finished sequences free their slot for
 the next queued prompt (slot reuse = the speculative-buffer discipline
 again: fixed-capacity superset, poisoned/empty slots masked).  Greedy
-sampling.
+sampling.  Left-pad slots are *poisoned*, not fed as token 0: per-row
+``pad_lens`` masks them out of every attention read and re-bases RoPE, so
+batched output is bit-identical to each request's solo run
+(``tests/test_moe_serve.py::test_batching_invariance``).  A request that
+runs out of KV cache (``max_len``) with output budget remaining is marked
+``truncated=True`` and recorded as a ``serve.truncate``
+:class:`~repro.resilience.ladder.FailureEvent` — never a silent cut.
+Every successful wave appends a :class:`WaveStats` (wall time, committed
+tokens, MoE poison counts) to ``Engine.wave_stats`` — the raw feed for
+:mod:`repro.serve.traffic` and the ``dae_serve`` benchmark.
 
 Failure semantics (the degradation ladder, serving edition): a request
 that raises during a wave no longer loses the whole wave.  The wave's
@@ -24,6 +33,7 @@ clones — shed after serving, excluded from results).
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -33,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..models.model import build_model
+from ..models.model import build_model, group_count, group_pattern
 from ..resilience import faults
 from ..resilience.faults import InjectedFault
 from ..resilience.ladder import FailureEvent
@@ -49,6 +59,18 @@ class Request:
     retries: int = 0
     failed: bool = False
     error: Optional[str] = None
+    truncated: bool = False  # hit max_len with output budget remaining
+
+
+@dataclass
+class WaveStats:
+    """Structured per-wave serving stats (the dae_serve bench's raw feed)."""
+    batch: int           # requests in the wave
+    wall_s: float        # measured wall time (prefill + decode, blocked)
+    tokens: int          # committed output tokens
+    moe_poison: int      # poisoned MoE dispatch requests (capacity races)
+    moe_requests: int    # total MoE dispatch requests issued
+    truncated: int       # requests cut off at max_len this wave
 
 
 class Engine:
@@ -63,8 +85,14 @@ class Engine:
         self.max_len = max_len
         self.wave_retries = wave_retries
         self.events: List[FailureEvent] = []
+        self.wave_stats: List[WaveStats] = []
+        # MoE dispatch requests issued per token position (for poison rates)
+        pattern = group_pattern(cfg)
+        self._moe_per_tok = (pattern.count("moe") * group_count(cfg)
+                             * (cfg.top_k or 0))
         self._decode = jax.jit(
-            lambda p, c, t, n: self.model.decode_step(p, c, t, n))
+            lambda p, c, t, n, pl: self.model.decode_step(
+                p, c, t, n, pad_lens=pl, return_stats=True))
 
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Serve all requests; batched prefill per wave, partial results
@@ -92,39 +120,52 @@ class Engine:
                 while (queue and len(wave) < self.slots
                        and not queue[0].retries):
                     wave.append(queue.popleft())
-            try:
-                self._run_wave(wave)
-            except Exception as e:  # noqa: BLE001 — degrade, don't crash
-                rid = getattr(e, "rid", None)
-                site = getattr(e, "site", "")
-                for r in wave:
-                    r.out.clear()  # never commit a torn wave's tokens
-                    poisoned = rid is not None and r.rid == rid
-                    if poisoned or r.retries >= self.wave_retries:
-                        r.failed = True
-                        r.error = str(e)
-                        r.done = True
-                        self.events.append(FailureEvent(
-                            site=site, rung="solo" if r.retries else "wave",
-                            cause=str(e), retries=r.retries,
-                            outcome="failed"))
-                        if r.rid >= 0:
-                            results[r.rid] = r.out
-                    elif r.rid < 0:
-                        pass  # synthetic storm clone: shed, don't retry
-                    else:
-                        self.events.append(FailureEvent(
-                            site=site, rung="wave", cause=str(e),
-                            retries=r.retries, outcome="retry"))
-                        r.retries += 1
-                        queue.appendleft(r)
-                continue
-            for r in wave:
-                if r.rid >= 0:
-                    results[r.rid] = r.out
+            self.serve_wave(wave, queue, results)
         return results
 
-    def _run_wave(self, wave: List[Request]) -> None:
+    def serve_wave(self, wave: List[Request], queue: deque,
+                   results: Dict[int, List[int]]) -> Optional[WaveStats]:
+        """Run one wave with torn-wave containment (the failure semantics of
+        the module docstring).  On success the wave's tokens are committed
+        into ``results`` and the measured :class:`WaveStats` is returned
+        (also appended to ``self.wave_stats``).  On a fault the partial
+        tokens are discarded, the culprit (or out-of-retries requests) are
+        failed, survivors are pushed back onto ``queue``, and None is
+        returned — a torn wave never commits and never produces stats."""
+        try:
+            stats = self._run_wave(wave)
+        except Exception as e:  # noqa: BLE001 — degrade, don't crash
+            rid = getattr(e, "rid", None)
+            site = getattr(e, "site", "")
+            for r in wave:
+                r.out.clear()  # never commit a torn wave's tokens
+                poisoned = rid is not None and r.rid == rid
+                if poisoned or r.retries >= self.wave_retries:
+                    r.failed = True
+                    r.error = str(e)
+                    r.done = True
+                    self.events.append(FailureEvent(
+                        site=site, rung="solo" if r.retries else "wave",
+                        cause=str(e), retries=r.retries,
+                        outcome="failed"))
+                    if r.rid >= 0:
+                        results[r.rid] = r.out
+                elif r.rid < 0:
+                    pass  # synthetic storm clone: shed, don't retry
+                else:
+                    self.events.append(FailureEvent(
+                        site=site, rung="wave", cause=str(e),
+                        retries=r.retries, outcome="retry"))
+                    r.retries += 1
+                    queue.appendleft(r)
+            return None
+        self.wave_stats.append(stats)
+        for r in wave:
+            if r.rid >= 0:
+                results[r.rid] = r.out
+        return stats
+
+    def _run_wave(self, wave: List[Request]) -> WaveStats:
         if faults.ACTIVE:
             for r in wave:
                 if faults.fire("serve.slot"):
@@ -132,24 +173,57 @@ class Engine:
                         "serve.slot", f"slot died serving request {r.rid}",
                         rid=r.rid)
         b = len(wave)
+        t0 = time.perf_counter()
         plen = max(len(r.prompt) for r in wave)
         toks = np.zeros((b, plen), np.int32)
+        pads = np.zeros((b,), np.int32)
         for i, r in enumerate(wave):
             toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
-        logits, cache = self.model.prefill(self.params, jnp.asarray(toks),
-                                           max_len=self.max_len)
+            pads[i] = plen - len(r.prompt)
+        # pad slots are poisoned requests, not token 0: pad_lens masks them
+        # out of attention and re-bases RoPE, so a batched request decodes
+        # exactly what its solo run would
+        pad_lens = jnp.asarray(pads)
+        logits, cache, pstats = self.model.prefill(
+            self.params, jnp.asarray(toks), max_len=self.max_len,
+            pad_lens=pad_lens, return_stats=True)
+        poison = int(pstats["moe_poison"])
+        moe_reqs = b * plen * self._moe_per_tok
         pos = plen
         cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         max_new = max(r.max_new for r in wave)
+        tokens = 0
         for step in range(max_new):
             faults.inject("serve.decode")
             for i, r in enumerate(wave):
                 if step < r.max_new:
                     r.out.append(int(cur[i, 0]))
+                    tokens += 1
             if pos + 1 >= self.max_len:
+                if step + 1 < max_new:
+                    # out of cache, output budget remaining: an explicit
+                    # degradation event, never a silent cut
+                    for r in wave:
+                        if step + 1 < r.max_new:
+                            r.truncated = True
+                            self.events.append(FailureEvent(
+                                site="serve.truncate", rung="request",
+                                cause=(f"request {r.rid} hit max_len="
+                                       f"{self.max_len} with "
+                                       f"{r.max_new - step - 1} tokens "
+                                       "unserved"),
+                                retries=r.retries, outcome="truncated"))
                 break
-            logits, cache = self._decode(self.params, cache, cur, pos)
+            logits, cache, dstats = self._decode(self.params, cache, cur,
+                                                 pos, pad_lens)
+            poison += int(dstats["moe_poison"])
+            moe_reqs += b * self._moe_per_tok
             cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             pos += 1
+        jax.block_until_ready(logits)
         for r in wave:
             r.done = True
+        return WaveStats(batch=b, wall_s=time.perf_counter() - t0,
+                         tokens=tokens,
+                         moe_poison=poison, moe_requests=moe_reqs,
+                         truncated=sum(r.truncated for r in wave))

@@ -104,7 +104,11 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
         calls["chaos"] = {"repeats": repeats, "budget_s": budget_s}
         return "quiet_ovh_max=0.10%"
 
-    from benchmarks import dae_chaos, dae_codegen
+    def fake_serve(quick=False, **kw):
+        calls["serve"] = {"quick": quick}
+        return "bitexact=True,p50_ms=1.0,poison=0"
+
+    from benchmarks import dae_chaos, dae_codegen, moe_ab
     monkeypatch.setattr(dae_table1, "main", fake_table1)
     monkeypatch.setattr(dae_table1, "steady_ab", fake_steady)
     monkeypatch.setattr(dae_table2, "main", fake_table2)
@@ -112,6 +116,7 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
     monkeypatch.setattr(dae_quiescent, "main", fake_quiescent)
     monkeypatch.setattr(dae_codegen, "main", fake_codegen)
     monkeypatch.setattr(dae_chaos, "main", fake_chaos)
+    monkeypatch.setattr(moe_ab, "dae_serve", fake_serve)
 
     out = tmp_path / "bench.json"
     bench_run.main(["--quick", "--json", str(out)])
@@ -125,10 +130,12 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
     assert calls["quiescent"]["points"] == dae_quiescent.QUICK_POINTS
     assert calls["codegen"]["jax_benches"] == ("spmv",)  # one jax leg
     assert calls["chaos"]["repeats"] == 8  # quick trades margin for wall
+    assert calls["serve"]["quick"] is True  # serve A/B rides the quick gate
     rows = json.loads(out.read_text())
     names = [r["name"] for r in rows]
     assert names == ["dae_table1", "dae_steady", "dae_table2", "dae_fig7",
-                     "dae_quiescent", "dae_codegen", "dae_chaos"]
+                     "dae_quiescent", "dae_codegen", "dae_chaos",
+                     "dae_serve"]
     assert "moe_ab" not in names and "kernel_bench" not in names
 
 
@@ -158,7 +165,7 @@ def test_window_flag_propagates(monkeypatch, tmp_path, capsys):
     monkeypatch.setattr(dae_quiescent, "main",
                         lambda points=None, **kw:
                         {"speedup": 1.0, "hit": 0.0, "rows": []})
-    from benchmarks import dae_chaos, dae_codegen
+    from benchmarks import dae_chaos, dae_codegen, moe_ab
     monkeypatch.setattr(dae_codegen, "main",
                         lambda benches=None, jax_benches=None, **kw:
                         {"spmv": {"interp_us": 1.0, "numpy_us": 1.0,
@@ -166,6 +173,8 @@ def test_window_flag_propagates(monkeypatch, tmp_path, capsys):
     monkeypatch.setattr(dae_chaos, "main",
                         lambda repeats=None, budget_s=None, **kw:
                         "quiet_ovh_max=0.10%")
+    monkeypatch.setattr(moe_ab, "dae_serve",
+                        lambda quick=False, **kw: "bitexact=True,poison=0")
     bench_run.main(["--quick", "--json", str(tmp_path / "a.json")])
     assert seen["window_env"] == "1"
     assert seen["pipeline_env"] == "1"
