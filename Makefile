@@ -39,7 +39,7 @@ bench-gate:
 	git show HEAD:BENCH_quick.json > BENCH_gate_baseline.json
 	$(PY) -m benchmarks.compare BENCH_gate.json \
 		--baseline BENCH_gate_baseline.json --tolerance $(TOLERANCE) \
-		--require dae_table1,dae_codegen,dae_serve,dae_codegen.hist_epochs,dae_codegen.hist_calls,dae_codegen.spmv_epochs,dae_codegen.spmv_calls,dae_codegen.sort_epochs,dae_codegen.sort_calls,dae_serve.bitexact,dae_serve.poison
+		--require "dae_table1,dae_codegen,dae_serve,dae_codegen.hist_epochs,dae_codegen.hist_calls,dae_codegen.spmv_epochs,dae_codegen.spmv_calls,dae_codegen.sort_epochs,dae_codegen.sort_calls,dae_serve.bitexact,dae_serve.poison,dae_frontend.warm_ratio>1,dae_frontend.hit_rate>0.4"
 
 chaos:
 	$(PY) -m benchmarks.dae_chaos --soak 4

@@ -20,6 +20,11 @@ numeric value (a trailing ``x`` is stripped), a new value above
 counters like ``dae_codegen.hist_calls`` gate a forwarding regression
 that wall time would hide.  A derived key missing from the *baseline*
 only warns (older baselines predate the key).
+A ``section.key>floor`` entry gates a bigger-is-better metric instead:
+the NEW value must be numeric and strictly above ``floor`` (the baseline
+is not consulted, so improvements can't trip the regression check) —
+this is how ``dae_frontend.warm_ratio>1`` asserts the compile cache
+still saves work.
 The default tolerance (25%) suits a quiet dedicated box; CI on shared
 runners passes a looser value explicitly.  Faster-than-baseline rows are
 listed as improvements so a stale baseline is visible too.
@@ -97,12 +102,34 @@ def check_required_keys(reqs: List[str], new_path: str, base_path: str,
     base_d = load_derived(base_path)
     lines: List[str] = []
     for req in reqs:
-        section, key = req.split(".", 1)
+        floor = None
+        spec = req
+        if ">" in spec:  # bigger-is-better floor gate: section.key>floor
+            spec, _, floor_s = spec.partition(">")
+            try:
+                floor = float(floor_s)
+            except ValueError:
+                raise SystemExit(
+                    f"--require entry {req!r}: floor {floor_s!r} is not "
+                    f"numeric") from None
+        section, key = spec.split(".", 1)
         nv = new_d.get(section, {}).get(key)
         if nv is None:
             raise SystemExit(
-                f"{new_path}: required derived key {req!r} missing — the "
+                f"{new_path}: required derived key {spec!r} missing — the "
                 f"benchmark that produces it did not run (or was renamed)")
+        if floor is not None:
+            nn = _numeric(nv)
+            if nn is None:
+                raise SystemExit(
+                    f"required derived key {spec!r} must be numeric to "
+                    f"gate against a floor, got {nv!r}")
+            if not nn > floor:
+                raise SystemExit(
+                    f"required derived key {spec!r} fell to {nv} "
+                    f"(must stay > {floor:g})")
+            lines.append(f"  {spec}: {nv} > {floor:g} ok")
+            continue
         bv = base_d.get(section, {}).get(key)
         if bv is None:
             lines.append(f"  {req}: {nv} (no baseline value — skipped)")
@@ -163,7 +190,9 @@ def main(argv=None) -> int:
                          "skipped.  A 'section.key' entry gates that "
                          "key of the section's derived string instead "
                          "(must exist in the new file; numeric values "
-                         "may not regress beyond tolerance)")
+                         "may not regress beyond tolerance); a "
+                         "'section.key>floor' entry asserts the new "
+                         "value stays strictly above the floor")
     args = ap.parse_args(argv)
     if args.tolerance < 0:
         raise SystemExit("--tolerance must be >= 0")

@@ -1,0 +1,123 @@
+"""dae_frontend — cold vs warm compile A/B through the persistent cache.
+
+Both frontend-opened workload families (pagerank, join) are compiled
+through a fresh ``repro.frontend.CompileCache`` root.  The first compile
+of a program is **cold**: the full decouple → hoist → poison pipeline,
+slice classification, iteration-uniformity analysis and all four source
+emissions run, and everything is persisted.  Every later compile of an
+identical program is **warm**: re-record + re-lower (cheap, and charged
+to both sides — each timed sample rebuilds the ``Program`` from the
+family's ``program()`` factory) plus a payload restore; analysis and
+emission never re-run.
+
+Reported per family:
+
+* ``cold_ms`` / ``warm_ms`` — best-of-``repeats`` wall times (each cold
+  sample invalidates the entry first, so it really recompiles);
+* ``warm_ratio`` = cold/warm, **asserted > 1 here** — and gated in CI
+  via the run.py derived key ``dae_frontend.warm_ratio`` with
+  ``compare.py --require``'s floor syntax (``dae_frontend.warm_ratio>1``).
+
+The section-wide cache hit rate lands in the derived string too; with
+the fixed sample plan it is deterministic (1 warm hit per cold miss),
+so a hit-rate drop means the warm path stopped matching.
+
+Bit-exactness comes first: before any timing, the *warm* object's
+generated kernels must reproduce ``interp.run`` memory bit-for-bit on
+the numpy target in both CU modes — a wrong cached kernel must fail the
+bench, not post a fast number.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from typing import Dict, Iterable
+
+import numpy as np
+
+#: the frontend-authored families and their Program factories' module
+FAMILIES = ("pagerank", "join")
+
+
+def _best_of_ms(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3  # ms
+
+
+def main(repeats: int = 5,
+         families: Iterable[str] = FAMILIES) -> Dict[str, Dict[str, float]]:
+    from repro.bench_irregular import ALL, join, pagerank
+    from repro.core import interp
+    from repro.frontend import CompileCache
+
+    factories = {"pagerank": pagerank.program, "join": join.program}
+    root = tempfile.mkdtemp(prefix="dae-frontend-bench-")
+    cache = CompileCache(root)
+    out: Dict[str, Dict[str, float]] = {}
+    hdr = (f"{'bench':9s} {'cold ms':>8s} {'warm ms':>8s} "
+           f"{'warm_ratio':>11s} {'exact':>6s}")
+    print(hdr)
+    print("-" * len(hdr))
+    try:
+        for name in families:
+            factory = factories[name]
+            case = ALL[name]()  # memory + decoupled set for the gate
+            decoupled = case.decoupled
+
+            def compile_warm():
+                return factory().compile(decoupled, cache=cache)
+
+            def compile_cold():
+                cache.invalidate(factory(), decoupled)
+                return compile_warm()
+
+            cold = compile_cold()
+            assert cold.cache_stats["outcome"] == "cold", cold.cache_stats
+            warm = compile_warm()
+            assert warm.cache_stats["outcome"] == "warm", warm.cache_stats
+
+            # correctness gate: the warm object, both CU modes, bit-exact
+            ref = {k: v.copy() for k, v in case.memory.items()}
+            interp.run(case.fn, ref, case.params)
+            for cu_mode in ("state-machine", "vector"):
+                mem = {k: v.copy() for k, v in case.memory.items()}
+                r = warm.run_generated(mem, target="numpy", cu_mode=cu_mode)
+                assert r.target_used == "numpy", r.fallback_reason
+                assert r.cu_mode == cu_mode, (r.cu_mode, r.vector_reason)
+                assert r.cache["outcome"] == "warm", r.cache
+                ok = all(np.array_equal(ref[k], mem[k]) for k in ref)
+                assert ok, f"{name}: warm {cu_mode} diverged from interp"
+
+            # timing: cold re-invalidates per sample, warm re-records per
+            # sample, so recording+lowering cost is charged to both sides
+            cold_ms = _best_of_ms(compile_cold, repeats)
+            warm_ms = _best_of_ms(compile_warm, repeats)
+            ratio = cold_ms / warm_ms
+            assert ratio > 1.0, (
+                f"{name}: warm compile ({warm_ms:.2f} ms) not faster than "
+                f"cold ({cold_ms:.2f} ms) — the cache saves no work")
+            out[name] = {"cold_ms": cold_ms, "warm_ms": warm_ms,
+                         "warm_ratio": ratio}
+            print(f"{name:9s} {cold_ms:8.2f} {warm_ms:8.2f} "
+                  f"{ratio:10.2f}x {'yes':>6s}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    served = cache.hits + cache.misses + cache.stale
+    hit_rate = cache.hits / served if served else 0.0
+    out["_cache"] = {"hits": cache.hits, "misses": cache.misses,
+                     "stale": cache.stale, "invalidated": cache.invalidated,
+                     "hit_rate": hit_rate}
+    print(f"\ncache: hits={cache.hits} misses={cache.misses} "
+          f"stale={cache.stale} invalidated={cache.invalidated} "
+          f"hit_rate={hit_rate:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

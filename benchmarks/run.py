@@ -200,6 +200,24 @@ def _run_sections(args) -> None:
     sv, ussv = _timed(lambda: moe_ab_mod.dae_serve(quick=quick))
     rows.append(("dae_serve", ussv, sv))
 
+    print()
+    print("=" * 72)
+    print("Frontend compile cache — cold vs warm compile A/B "
+          "(pagerank + join)")
+    print("=" * 72)
+    # runs in quick AND full: the bench asserts warm < cold and bit-exact
+    # warm kernels, and the derived warm_ratio is the CI floor gate
+    # (compare.py --require dae_frontend.warm_ratio>1)
+    from benchmarks import dae_frontend
+    fr, usfr = _timed(lambda: dae_frontend.main(
+        repeats=3 if quick else 7))
+    fams = [k for k in fr if not k.startswith("_")]
+    parts = [f"warm_ratio={min(fr[k]['warm_ratio'] for k in fams):.2f}x",
+             f"hit_rate={fr['_cache']['hit_rate']:.2f}"]
+    parts += [f"{k}_warm_ratio={fr[k]['warm_ratio']:.2f}x" for k in fams]
+    parts += [f"{k}_cold_ms={fr[k]['cold_ms']:.2f}" for k in fams]
+    rows.append(("dae_frontend", usfr, ",".join(parts)))
+
     if not quick:
         # the paper's technique inside the LM framework: MoE dispatch A/B
         print()

@@ -1,0 +1,111 @@
+"""Frontend demo: PageRank from combinators, on every engine, cached.
+
+    PYTHONPATH=src python examples/dae_frontend_demo.py
+
+Builds push-pull PageRank *entirely* from the composition API
+(``repro.frontend``) — an outer iteration loop over two sequential
+sibling loops, the shape the frontend added to ``LoopNest`` — then:
+
+1. compiles it **cold** through the persistent compile cache
+   (decouple → hoist → poison → classify → emit, everything persisted),
+2. compiles the identical program again **warm** (analysis and source
+   emission skipped — restored from the cache payload) and prints the
+   cold/warm timing ratio,
+3. runs the warm object on the numpy target (state-machine and
+   vectorised CU) and the jax/Pallas target, each bit-identical to the
+   sequential reference interpreter.
+
+The cache root defaults to a temp directory; set ``DAE_CACHE_DIR`` to
+keep it across runs (second invocation starts warm).
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import interp
+from repro.frontend import CompileCache, dae
+
+SC, BASE, AN, AD = 1024, 154, 85, 100
+
+
+def build_pagerank(n, n_edges, iters, thresh=64):
+    p = dae("pagerank_demo", arrays={"R": n, "C": n, "src": n_edges,
+                                     "dst": n_edges, "deg": n})
+    with p.range_loop("it", p.const(iters, "T")):
+        with p.range_loop("e", p.const(n_edges, "E")):
+            p.load("u", "src", "e")
+            p.load("rv", "R", "u")
+            p.bin("act", ">", "rv", p.const(thresh, "THRESH"))
+            with p.cond("act", then="push"):
+                p.load("dg", "deg", "u")
+                p.bin("sh", "//", "rv", "dg")
+                p.load("d", "dst", "e")
+                p.update("C", "d", "sh")
+        with p.range_loop("v", p.const(n, "N")):
+            p.load("cv", "C", "v")
+            p.bin("num", "*", "cv", p.const(AN, "AN"))
+            p.bin("sc", "//", "num", p.const(AD, "AD"))
+            p.bin("r1", "+", p.const(BASE, "B"), "sc")
+            p.store("R", "v", "r1")
+            p.store("C", "v", "zero")
+    return p
+
+
+def main():
+    n, n_edges, iters = 24, 96, 3
+    rng = np.random.default_rng(7)
+    src = rng.integers(0, n, n_edges).astype(np.int64)
+    mem = {"R": rng.integers(32, SC // 2, n).astype(np.int64),
+           "C": np.zeros(n, dtype=np.int64),
+           "src": src,
+           "dst": rng.integers(0, n, n_edges).astype(np.int64),
+           "deg": np.bincount(src, minlength=n).astype(np.int64)}
+    ref = {k: v.copy() for k, v in mem.items()}
+    interp.run(build_pagerank(n, n_edges, iters).build(), ref)
+
+    root = os.environ.get("DAE_CACHE_DIR") or tempfile.mkdtemp(
+        prefix="dae-frontend-demo-")
+    cache = CompileCache(root)
+    print(f"cache root: {cache.root}\n")
+
+    t0 = time.perf_counter()
+    cold = build_pagerank(n, n_edges, iters).compile({"R", "C"},
+                                                     cache=cache)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm = build_pagerank(n, n_edges, iters).compile({"R", "C"},
+                                                     cache=cache)
+    t_warm = time.perf_counter() - t0
+    print(f"cold compile: {1e3 * t_cold:6.2f} ms  "
+          f"(outcome={cold.cache_stats['outcome']})")
+    print(f"warm compile: {1e3 * t_warm:6.2f} ms  "
+          f"(outcome={warm.cache_stats['outcome']}, analysis + emission "
+          f"restored from cache)")
+    print(f"cold/warm ratio: {t_cold / t_warm:.1f}x\n")
+
+    hdr = (f"{'target':6s} {'cu mode':13s} {'commits':>7s} {'poisons':>7s} "
+           f"{'cache':>6s} {'exact':>6s}")
+    print(hdr)
+    print("-" * len(hdr))
+    all_ok = True
+    for target, cu_mode in (("numpy", "state-machine"), ("numpy", "vector"),
+                            ("jax", "auto")):
+        m = {k: v.copy() for k, v in mem.items()}
+        r = warm.run_generated(m, target=target, cu_mode=cu_mode,
+                               interpret=True)
+        ok = all(np.array_equal(ref[k], m[k]) for k in ref)
+        all_ok = all_ok and ok
+        print(f"{target:6s} {r.cu_mode or '-':13s} "
+              f"{r.stats['stores_committed']:7d} "
+              f"{r.stats['stores_poisoned']:7d} "
+              f"{r.cache['outcome']:>6s} {str(ok):>6s}")
+    print(f"\nranks (fixed-point /{SC}): {ref['R'][:8]} ...")
+    print(f"cache counters: hits={cache.hits} misses={cache.misses} "
+          f"stale={cache.stale}")
+    print(f"bit-identical to interp: {all_ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,12 @@
 """The paper's §8 benchmark suite, restructured for the DAE IR.
 
-Nine irregular kernels from the graph/data-analytics domain (§8.1.2).  Where
-the paper replaced dynamically-growing structures with HLS library
-equivalents, we restructure to bounded, loop-based forms (edge-centric BFS /
-Bellman-Ford instead of queue/heap versions — §4's honest limitation on
-φ-carried data LoD applies identically to both systems):
+Nine irregular kernels from the graph/data-analytics domain (§8.1.2), plus
+two frontend-authored families (``repro.frontend`` — PR 9) that exercise
+sequential sibling loops.  Where the paper replaced dynamically-growing
+structures with HLS library equivalents, we restructure to bounded,
+loop-based forms (edge-centric BFS / Bellman-Ford instead of queue/heap
+versions — §4's honest limitation on φ-carried data LoD applies
+identically to both systems):
 
 =========  =====================================================  ==========
 kernel     form                                                   decoupled
@@ -18,6 +20,8 @@ spmv       if (V[col[j]] != 0) V[N+row[j]] += val[j]*V[col[j]]    V
 bfs        edge-centric level-sync BFS on dist                    dist
 sssp       edge-centric Bellman–Ford rounds                       dist
 bc         BFS levels + sigma path counts (two LSQs, as paper)    dist,sigma
+pagerank   push-pull fixed-point PageRank (frontend-authored)     R,C
+join       hash join + group-by aggregate (frontend-authored)     HT,G
 =========  =====================================================  ==========
 """
 from __future__ import annotations
@@ -40,7 +44,8 @@ class BenchCase:
     note: str = ""
 
 
-from . import hist, thr, mm, fw, sort as sort_b, spmv, bfs, sssp, bc  # noqa: E402
+from . import (hist, thr, mm, fw, sort as sort_b, spmv, bfs, sssp, bc,  # noqa: E402
+               pagerank, join)
 
 ALL = {
     "bfs": bfs.build,
@@ -52,4 +57,6 @@ ALL = {
     "fw": fw.build,
     "sort": sort_b.build,
     "spmv": spmv.build,
+    "pagerank": pagerank.build,
+    "join": join.build,
 }

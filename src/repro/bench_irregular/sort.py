@@ -1,4 +1,4 @@
-"""sort — bitonic mergesort (§8.1.2, size 64).
+"""sort — bitonic mergesort (§8.1.2, size 64), frontend-authored.
 
 The bitonic network's compare-exchange pairs (lo, hi, dir) are precomputed
 into read-only arrays (the network is static); the kernel walks them:
@@ -7,12 +7,16 @@ into read-only arrays (the network is static); the kernel walks them:
         x = a[lo[t]]; y = a[hi[t]]
         if (x > y) == dir[t]:
             a[lo[t]] = y; a[hi[t]] = x
+
+Formerly hand-rolled block wiring; now composed through
+``repro.frontend`` (PR 9) — ``tests/test_frontend.py`` pins the lowered
+IR byte-identical to the original hand-rolled layout.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from ..core.ir import Function
+from ..frontend import dae
 
 
 def _bitonic_pairs(n: int):
@@ -38,39 +42,18 @@ def build(n: int = 64, seed: int = 0):
     pairs = _bitonic_pairs(n)
     P = len(pairs)
 
-    f = Function("sort")
-    f.array("a", n)
-    f.array("lo", P)
-    f.array("hi", P)
-    f.array("dir", P)
-
-    e = f.block("entry")
-    e.const("zero", 0)
-    e.const("one", 1)
-    e.const("P", P)
-    e.br("header")
-    h = f.block("header")
-    h.phi("t", [("entry", "zero"), ("latch", "t_next")])
-    h.bin("c", "<", "t", "P")
-    h.cbr("c", "body", "exit")
-    b = f.block("body")
-    b.load("il", "lo", "t")
-    b.load("ih", "hi", "t")
-    b.load("x", "a", "il")
-    b.load("y", "a", "ih")
-    b.load("dd", "dir", "t")
-    b.bin("gt", ">", "x", "y")
-    b.bin("p", "==", "gt", "dd")
-    b.cbr("p", "swap", "latch")
-    s = f.block("swap")
-    s.store("a", "il", "y")
-    s.store("a", "ih", "x")
-    s.br("latch")
-    l = f.block("latch")
-    l.bin("t_next", "+", "t", "one")
-    l.br("header")
-    f.block("exit").ret()
-    f.verify()
+    p = dae("sort", arrays={"a": n, "lo": P, "hi": P, "dir": P})
+    with p.range_loop("t", p.const(P, "P")):
+        p.load("il", "lo", "t")
+        p.load("ih", "hi", "t")
+        p.load("x", "a", "il")
+        p.load("y", "a", "ih")
+        p.load("dd", "dir", "t")
+        p.bin("gt", ">", "x", "y")
+        p.bin("p", "==", "gt", "dd")
+        with p.cond("p", then="swap"):
+            p.store("a", "il", "y")
+            p.store("a", "ih", "x")
 
     mem = {
         "a": rng.integers(0, 1000, n).astype(np.int64),
@@ -78,4 +61,4 @@ def build(n: int = 64, seed: int = 0):
         "hi": np.array([p[1] for p in pairs], dtype=np.int64),
         "dir": np.array([p[2] for p in pairs], dtype=np.int64),
     }
-    return BenchCase("sort", f, mem, {"a"}, note=f"n={n} pairs={P}")
+    return BenchCase("sort", p.build(), mem, {"a"}, note=f"n={n} pairs={P}")

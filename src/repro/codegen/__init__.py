@@ -125,6 +125,10 @@ class CodegenRun:
     #: (:class:`~repro.resilience.ladder.FailureEvent`); empty on a
     #: clean first-rung success
     events: List[FailureEvent] = field(default_factory=list)
+    #: frontend compile-cache provenance when ``compiled`` came through
+    #: :mod:`repro.frontend` with a cache attached (outcome + counters,
+    #: see :class:`repro.frontend.cache.CompileCache`); None otherwise
+    cache: Optional[Dict[str, Any]] = None
 
     @property
     def fell_back(self) -> bool:
@@ -298,4 +302,5 @@ def run(compiled, memory: Dict[str, np.ndarray],
 
     return CodegenRun(target, target_used, info, stats, fallback_reason,
                       streams_box.get("s"), used_cu, vector_reason,
-                      forward_reason, ladder.events)
+                      forward_reason, ladder.events,
+                      cache=getattr(compiled, "cache_stats", None))

@@ -749,6 +749,33 @@ def _phi_err(dest, bname, prev):
     raise CodegenError(f"phi {dest} in {bname}: no incoming for pred {prev}")
 
 
+def _build_runner(fn: Function, mode: str, src: str):
+    """exec ``src`` (an ``emit_source`` text) into a runner for ``mode``."""
+    from ..core.sim.base import POISON
+    from .streams import Streams
+    base = {"_CodegenError": CodegenError, "_phi_err": _phi_err,
+            "_POISON": POISON, "_Streams": Streams}
+    if mode == "cu-vector":
+        from .vector import VECTOR_NS
+        base.update(VECTOR_NS)
+    ns = _compile_ns(src, f"<codegen-{mode}:{fn.name}>", base)
+    make = ns["_run"]
+    make.__source__ = src
+    return make
+
+
+def preload_source(fn: Function, mode: str, src: Optional[str]) -> None:
+    """Memoise a previously-emitted source as ``fn``'s runner for ``mode``.
+
+    The frontend compile cache stores ``emit_source`` texts; on a warm
+    hit it preloads them here so :func:`compile_mode` never re-walks the
+    IR.  ``src=None`` records an emission refusal (the mode's cold-path
+    outcome) the same way.
+    """
+    setattr(fn, _ATTR[mode],
+            None if src is None else _build_runner(fn, mode, src))
+
+
 def compile_mode(fn: Function, mode: str):
     """Compile ``fn`` in ``mode``; returns the runner or None (unsupported).
 
@@ -763,18 +790,6 @@ def compile_mode(fn: Function, mode: str):
     except AttributeError:
         pass
     src = emit_source(fn, mode)
-    if src is None:
-        setattr(fn, attr, None)
-        return None
-    from ..core.sim.base import POISON
-    from .streams import Streams
-    base = {"_CodegenError": CodegenError, "_phi_err": _phi_err,
-            "_POISON": POISON, "_Streams": Streams}
-    if mode == "cu-vector":
-        from .vector import VECTOR_NS
-        base.update(VECTOR_NS)
-    ns = _compile_ns(src, f"<codegen-{mode}:{fn.name}>", base)
-    make = ns["_run"]
-    make.__source__ = src
+    make = None if src is None else _build_runner(fn, mode, src)
     setattr(fn, attr, make)
     return make

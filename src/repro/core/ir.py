@@ -321,7 +321,17 @@ class LoopNest:
       (from inside a body block) chain automatically: an inner header's
       exit edge targets the enclosing latch.
     * The first loop uses the canonical ``header``/``body``/``latch``
-      names; nested loops prefix them with the loop variable.
+      names; any further loop (nested *or* a sequential sibling) prefixes
+      them with the loop variable.
+    * **Sequential sibling loops** (two loops at the same nesting level,
+      the second entered when the first exhausts) wire through the
+      header-exit edge: close the first loop with
+      ``close(exit_to=<next header name>)`` and enter the second with
+      ``pred=<first header name>`` — ``pred`` names the already-wired
+      predecessor block for the induction phi, so ``enter`` skips the
+      ``frm.br`` edge it would otherwise create.  ``header_name(var)``
+      predicts the block names so the hand-off can be wired before the
+      second loop exists.
     """
 
     def __init__(self, fn: Function, entry: str = "entry"):
@@ -347,28 +357,46 @@ class LoopNest:
         return name
 
     # -- loops ---------------------------------------------------------------
+    def header_name(self, var: str) -> str:
+        """Predict the header block name ``enter(var, ...)`` would use now.
+
+        Lets a sequential hand-off be wired before the next loop exists:
+        ``nest.close(exit_to=nest.header_name("j"))`` then
+        ``nest.enter("j", ..., pred=prev_header)``.
+        """
+        pre = "" if "header" not in self.fn.blocks else f"{var}_"
+        return f"{pre}header"
+
     def enter(self, var: str, bound: str,
-              frm: Optional[Block] = None) -> Block:
+              frm: Optional[Block] = None,
+              pred: Optional[str] = None) -> Block:
         """Open ``for var in range(bound)``; returns the open body block.
 
         ``frm`` is the block that enters the loop (default: the entry
         block for the outermost loop, the enclosing body block for nested
-        ones).
+        ones).  ``pred`` instead names an *already-wired* predecessor — a
+        block whose terminator already targets this loop's header (the
+        sequential-sibling hand-off) — so no ``frm.br`` edge is added and
+        the induction phi takes its zero from ``pred``.
         """
-        if frm is None:
-            frm = self.entry if not self._stack else self._stack[-1]["body"]
-        depth = len(self._stack)
-        pre = "" if depth == 0 else f"{var}_"
+        # the first loop claims the canonical unprefixed names; every
+        # later loop — nested or sequential sibling — prefixes with `var`
+        pre = "" if "header" not in self.fn.blocks else f"{var}_"
         header = self.fn.block(f"{pre}header")
         body = self.fn.block(f"{pre}body")
         # the latch is built now (so body paths can branch to it) but only
         # *registered* at close(), keeping the block order of the
         # conventional hand-rolled layout: body blocks first, latch after
         latch = Block(f"{pre}latch")
-        frm.br(header.name)
-        header.phi(var, [(frm.name, self._pool[0]),
+        if pred is None:
+            if frm is None:
+                frm = (self.entry if not self._stack
+                       else self._stack[-1]["body"])
+            frm.br(header.name)
+            pred = frm.name
+        header.phi(var, [(pred, self._pool[0]),
                          (latch.name, f"{var}_next")])
-        cond = f"{var}_c" if depth else "c"
+        cond = "c" if pre == "" else f"{var}_c"
         header.bin(cond, "<", var, bound)
         latch.bin(f"{var}_next", "+", var, self._pool[1])
         latch.br(header.name)
@@ -380,6 +408,11 @@ class LoopNest:
     def latch(self) -> str:
         """Name of the innermost latch (the branch target for body paths)."""
         return self._stack[-1]["latch"].name
+
+    @property
+    def header(self) -> str:
+        """Name of the innermost header (the sibling hand-off predecessor)."""
+        return self._stack[-1]["header"].name
 
     def close(self, exit_to: Optional[str] = None) -> None:
         """Close the innermost loop: wire its header's exit edge to

@@ -38,6 +38,9 @@ class CompiledDAE:
     #: arrays served by a DU/LSQ (recorded so executable backends need not
     #: re-derive the set from the slices)
     decoupled: Set[str] = None  # type: ignore[assignment]
+    #: populated by the frontend compile cache (repro.frontend.cache):
+    #: {"outcome": "cold"|"warm"|"stale", "key": ..., counters...}
+    cache_stats: Optional[Dict[str, Any]] = None
 
     # -- executable codegen hooks (see repro.codegen) -----------------------
     def codegen(self, target: str = "numpy") -> Dict[str, Optional[str]]:

@@ -1,0 +1,28 @@
+"""DAE-as-a-service frontend: composition API + persistent compile cache.
+
+The paper's transformation (decouple → hoist → poison, §4–§5) works on
+arbitrary reducible loop nests, but until this package every workload
+cost a page of hand-rolled IR block wiring.  ``repro.frontend`` is the
+front door:
+
+* :func:`dae` / :class:`Program` — record loop nests compositionally
+  (``range_loop``/``cond``/``load``/``store``/``update``) and lower
+  through :class:`repro.core.ir.LoopNest` to IR that is byte-identical
+  to the hand-rolled equivalent (see ``docs/frontend.md``);
+* :class:`CompileCache` — a ``DAE_CACHE_DIR``-rooted persistent cache
+  so repeat compiles of the same program skip decoupling, speculation,
+  poisoning, classification *and* source emission, with a re-lowered-IR
+  guard against stale payloads.
+
+>>> from repro.frontend import dae
+>>> p = dae("scale", arrays={"A": 8, "k": 8})
+>>> with p.range_loop("i", p.const(8, "N")):
+...     p.update("A", "i", p.load("kv", "k", "i"), op="*")
+'a_new0'
+>>> compiled = p.compile(decoupled={"A"})
+"""
+from .builder import FrontendError, Program, dae
+from .cache import SCHEMA, CompileCache, resolve_cache
+
+__all__ = ["CompileCache", "FrontendError", "Program", "SCHEMA", "dae",
+           "resolve_cache"]

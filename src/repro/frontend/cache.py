@@ -1,0 +1,216 @@
+"""Persistent compile cache for frontend programs.
+
+Repeat traffic through :meth:`repro.frontend.Program.compile` should
+never pay decouple/speculate/poison analysis or source emission twice:
+the first compile of a program stores everything the executable backends
+derive — the compiled slices, the :class:`~repro.codegen.SliceAnalysis`
+memo, the iteration-uniformity memo, and every ``emit_source`` text —
+and later compiles of an identical program restore it all from disk.
+
+Key discipline (mirrors the ``codegen.analyze`` memo, which keys on the
+identity of the slices rather than the container):
+
+* the **key** is a SHA-256 over the schema stamp, the compile mode, the
+  decoupled-array set, and the program's canonical recording text
+  (:meth:`Program.signature`) — content, not object identity;
+* the **payload** carries the lowered IR dump it was built from.  On a
+  warm hit the program is re-lowered (cheap — no analysis) and the dump
+  compared: a payload whose key matches but whose IR differs (hash
+  collision, hand-edited entry, stale schema inside the file) is
+  discarded, recorded as a ``FailureEvent(site="frontend.cache_stale")``,
+  and recompiled cold — never silently reused;
+* bumping :data:`SCHEMA` (any change to the IR, the transforms, or the
+  emitters that alters what a payload means) invalidates every entry,
+  because the stamp is inside the key.
+
+Cache roots: pass ``root=`` explicitly, or set ``DAE_CACHE_DIR`` and let
+:func:`resolve_cache` hand out a per-directory singleton; with neither,
+``Program.compile`` runs uncached.  Outcome + counters land on
+``CompiledDAE.cache_stats`` and ride through to ``CodegenRun.cache``.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+from typing import Any, Callable, Dict, List, Optional, Set
+
+from ..core.pipeline import CompiledDAE
+from ..resilience.ladder import FailureEvent
+
+#: bump on any change that alters payload meaning (IR shape, transform
+#: semantics, emitted-source conventions); lives inside the key, so old
+#: entries simply stop matching
+SCHEMA = 1
+
+_EMIT_MODES = ("agu-stream", "cu-numpy", "cu-jax", "cu-vector")
+
+
+class CompileCache:
+    """Disk-backed compile cache; one instance per root directory."""
+
+    def __init__(self, root: Optional[str] = None):
+        root = root or os.environ.get("DAE_CACHE_DIR")
+        if not root:
+            raise ValueError("CompileCache needs a root (argument or "
+                             "DAE_CACHE_DIR)")
+        self.root = os.path.realpath(root)
+        os.makedirs(self.root, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+        self.stale = 0
+        self.invalidated = 0
+        self.events: List[FailureEvent] = []
+
+    # -- keys ----------------------------------------------------------------
+    def key(self, signature: str, decoupled: Set[str], mode: str) -> str:
+        text = (f"dae-frontend/v{SCHEMA}\nmode={mode}\n"
+                f"decoupled={sorted(decoupled)}\n{signature}")
+        return hashlib.sha256(text.encode()).hexdigest()
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, f"{key}.pkl")
+
+    # -- the compile wrapper -------------------------------------------------
+    def compile(self, program, fn, decoupled: Set[str], mode: str,
+                compiler: Callable[..., CompiledDAE]) -> CompiledDAE:
+        """Warm-or-cold compile ``program`` (already lowered to ``fn``)."""
+        key = self.key(program.signature(), decoupled, mode)
+        dump = fn.dump()
+        comp, was_stale = self._load(key, dump)
+        if comp is not None:
+            self.hits += 1
+            comp.cache_stats = self._stats("warm", key)
+            return comp
+        outcome = "stale" if was_stale else "cold"
+        if not was_stale:
+            self.misses += 1
+        comp = compiler(fn, decoupled)
+        self._store(key, dump, comp)
+        comp.cache_stats = self._stats(outcome, key)
+        return comp
+
+    # -- store ---------------------------------------------------------------
+    def _store(self, key: str, dump: str, comp: CompiledDAE) -> None:
+        """Derive everything the backends would and persist it.
+
+        Runs classification + uniformity analysis + all source emission
+        *now* so the memo attrs pickled with the slices make the warm
+        path analysis-free.  Runner functions themselves are never
+        pickled — they are rebuilt from the cached source texts by
+        :func:`repro.codegen.emit.preload_source` at load time.
+        """
+        from .. import codegen
+        from ..codegen import AGU_VALUE_DEP
+        from ..codegen.emit import emit_source
+
+        info = codegen.analyze(comp)  # attaches the _codegen_analysis memo
+        sources: Dict[str, Optional[str]] = {
+            "agu-stream": (None if info.agu_class == AGU_VALUE_DEP
+                           else emit_source(comp.agu, "agu-stream")),
+        }
+        for m in _EMIT_MODES[1:]:
+            sources[m] = emit_source(comp.cu, m)  # memoises _codegen_uniform
+        payload = {"schema": SCHEMA, "dump": dump,
+                   "compiled": comp, "sources": sources}
+        tmp = self._path(key) + f".tmp.{os.getpid()}"
+        with open(tmp, "wb") as fh:
+            pickle.dump(payload, fh)
+        os.replace(tmp, self._path(key))
+
+    # -- load ----------------------------------------------------------------
+    def _load(self, key: str, expect_dump: str):
+        """Returns ``(compiled_or_None, was_stale)``."""
+        from ..codegen.emit import preload_source
+
+        path = self._path(key)
+        if not os.path.exists(path):
+            return None, False
+        try:
+            with open(path, "rb") as fh:
+                payload = pickle.load(fh)
+            if payload.get("schema") != SCHEMA:
+                raise _Stale(f"schema {payload.get('schema')!r} != {SCHEMA}")
+            if payload.get("dump") != expect_dump:
+                raise _Stale("re-lowered IR differs from cached payload")
+            comp = payload["compiled"]
+            sources = payload["sources"]
+        except Exception as e:  # corrupt pickle, bad schema, IR drift
+            self.stale += 1
+            ev = FailureEvent(site="frontend.cache_stale", rung="cache",
+                              cause=str(e), retries=0, outcome="descend")
+            ev.meta_key = key  # type: ignore[attr-defined]
+            self.events.append(ev)
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            return None, True
+        for m, src in sources.items():
+            preload_source(comp.agu if m == "agu-stream" else comp.cu,
+                           m, src)
+        return comp, False
+
+    # -- invalidation --------------------------------------------------------
+    def clear(self) -> int:
+        """Drop every entry under the root; returns the count removed."""
+        n = 0
+        for name in os.listdir(self.root):
+            if name.endswith(".pkl"):
+                try:
+                    os.unlink(os.path.join(self.root, name))
+                    n += 1
+                except OSError:
+                    pass
+        self.invalidated += n
+        return n
+
+    def invalidate(self, program, decoupled: Set[str],
+                   mode: str = "spec") -> bool:
+        """Drop one program's entry; returns whether one was removed."""
+        path = self._path(self.key(program.signature(), decoupled, mode))
+        try:
+            os.unlink(path)
+        except OSError:
+            return False
+        self.invalidated += 1
+        return True
+
+    # -- observability -------------------------------------------------------
+    def _stats(self, outcome: str, key: str) -> Dict[str, Any]:
+        stats: Dict[str, Any] = {
+            "outcome": outcome, "key": key, "root": self.root,
+            "hits": self.hits, "misses": self.misses, "stale": self.stale,
+            "invalidated": self.invalidated}
+        if outcome == "stale":
+            stats["events"] = [ev for ev in self.events
+                               if getattr(ev, "meta_key", None) == key]
+        return stats
+
+
+class _Stale(RuntimeError):
+    """Internal: a cache payload that must not be reused."""
+
+
+# -- ambient default ---------------------------------------------------------
+
+_DEFAULTS: Dict[str, CompileCache] = {}
+
+
+def resolve_cache(arg: Any) -> Optional[CompileCache]:
+    """``False`` → off; an instance → itself; ``None`` → the ambient
+    per-``DAE_CACHE_DIR`` singleton (or off when the env var is unset)."""
+    if arg is False:
+        return None
+    if isinstance(arg, CompileCache):
+        return arg
+    if arg is not None:
+        raise TypeError(f"cache must be a CompileCache, None or False, "
+                        f"not {type(arg).__name__}")
+    root = os.environ.get("DAE_CACHE_DIR")
+    if not root:
+        return None
+    root = os.path.realpath(root)
+    if root not in _DEFAULTS:
+        _DEFAULTS[root] = CompileCache(root)
+    return _DEFAULTS[root]

@@ -108,7 +108,14 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
         calls["serve"] = {"quick": quick}
         return "bitexact=True,p50_ms=1.0,poison=0"
 
-    from benchmarks import dae_chaos, dae_codegen, moe_ab
+    def fake_frontend(repeats=None, **kw):
+        calls["frontend"] = {"repeats": repeats}
+        return {"pagerank": {"cold_ms": 3.0, "warm_ms": 0.5,
+                             "warm_ratio": 6.0},
+                "_cache": {"hits": 4, "misses": 4, "stale": 0,
+                           "invalidated": 3, "hit_rate": 0.5}}
+
+    from benchmarks import dae_chaos, dae_codegen, dae_frontend, moe_ab
     monkeypatch.setattr(dae_table1, "main", fake_table1)
     monkeypatch.setattr(dae_table1, "steady_ab", fake_steady)
     monkeypatch.setattr(dae_table2, "main", fake_table2)
@@ -117,6 +124,7 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
     monkeypatch.setattr(dae_codegen, "main", fake_codegen)
     monkeypatch.setattr(dae_chaos, "main", fake_chaos)
     monkeypatch.setattr(moe_ab, "dae_serve", fake_serve)
+    monkeypatch.setattr(dae_frontend, "main", fake_frontend)
 
     out = tmp_path / "bench.json"
     bench_run.main(["--quick", "--json", str(out)])
@@ -131,12 +139,16 @@ def test_quick_flag_wires_reduced_matrix(monkeypatch, tmp_path, capsys):
     assert calls["codegen"]["jax_benches"] == ("spmv",)  # one jax leg
     assert calls["chaos"]["repeats"] == 8  # quick trades margin for wall
     assert calls["serve"]["quick"] is True  # serve A/B rides the quick gate
+    assert calls["frontend"]["repeats"] == 3  # quick trims the A/B samples
     rows = json.loads(out.read_text())
     names = [r["name"] for r in rows]
     assert names == ["dae_table1", "dae_steady", "dae_table2", "dae_fig7",
                      "dae_quiescent", "dae_codegen", "dae_chaos",
-                     "dae_serve"]
+                     "dae_serve", "dae_frontend"]
     assert "moe_ab" not in names and "kernel_bench" not in names
+    fe = next(r for r in rows if r["name"] == "dae_frontend")
+    assert "warm_ratio=6.00x" in fe["derived"]
+    assert "hit_rate=0.50" in fe["derived"]
 
 
 def test_window_flag_propagates(monkeypatch, tmp_path, capsys):
@@ -165,7 +177,7 @@ def test_window_flag_propagates(monkeypatch, tmp_path, capsys):
     monkeypatch.setattr(dae_quiescent, "main",
                         lambda points=None, **kw:
                         {"speedup": 1.0, "hit": 0.0, "rows": []})
-    from benchmarks import dae_chaos, dae_codegen, moe_ab
+    from benchmarks import dae_chaos, dae_codegen, dae_frontend, moe_ab
     monkeypatch.setattr(dae_codegen, "main",
                         lambda benches=None, jax_benches=None, **kw:
                         {"spmv": {"interp_us": 1.0, "numpy_us": 1.0,
@@ -175,6 +187,11 @@ def test_window_flag_propagates(monkeypatch, tmp_path, capsys):
                         "quiet_ovh_max=0.10%")
     monkeypatch.setattr(moe_ab, "dae_serve",
                         lambda quick=False, **kw: "bitexact=True,poison=0")
+    monkeypatch.setattr(dae_frontend, "main",
+                        lambda repeats=None, **kw:
+                        {"join": {"cold_ms": 2.0, "warm_ms": 1.0,
+                                  "warm_ratio": 2.0},
+                         "_cache": {"hit_rate": 0.5}})
     bench_run.main(["--quick", "--json", str(tmp_path / "a.json")])
     assert seen["window_env"] == "1"
     assert seen["pipeline_env"] == "1"
@@ -309,6 +326,38 @@ def test_gate_require_derived_key(tmp_path, capsys):
     with pytest.raises(SystemExit, match=r"cg\.hist_calls.*regressed"):
         bench_compare.main([worse, "--baseline", base,
                             "--require", "cg.hist_calls"])
+
+
+def test_gate_require_floor_key(tmp_path, capsys):
+    """'section.key>floor' gates a bigger-is-better metric: the new value
+    must stay strictly above the floor, and the baseline is never
+    consulted (so an improvement can't trip the regression check)."""
+    base = _write_derived(tmp_path / "base.json",
+                          [("fe", 100.0, "warm_ratio=1.80x")])
+    better = _write_derived(tmp_path / "better.json",
+                            [("fe", 100.0, "warm_ratio=9.50x")])
+    # 9.5x vs 1.8x baseline: a plain derived-key require would call this
+    # a regression; the floor gate passes it
+    assert bench_compare.main([better, "--baseline", base,
+                               "--require", "fe.warm_ratio>1"]) == 0
+    assert "warm_ratio: 9.50x > 1 ok" in capsys.readouterr().out
+    fell = _write_derived(tmp_path / "fell.json",
+                          [("fe", 100.0, "warm_ratio=0.90x")])
+    with pytest.raises(SystemExit, match=r"warm_ratio.*must stay > 1"):
+        bench_compare.main([fell, "--baseline", base,
+                            "--require", "fe.warm_ratio>1"])
+    # the floored key must still exist and be numeric
+    with pytest.raises(SystemExit, match=r"fe\.nope.*missing"):
+        bench_compare.main([better, "--baseline", base,
+                            "--require", "fe.nope>1"])
+    texty = _write_derived(tmp_path / "texty.json",
+                           [("fe", 100.0, "warm_ratio=fast")])
+    with pytest.raises(SystemExit, match="must be numeric"):
+        bench_compare.main([texty, "--baseline", base,
+                            "--require", "fe.warm_ratio>1"])
+    with pytest.raises(SystemExit, match="not numeric"):
+        bench_compare.main([better, "--baseline", base,
+                            "--require", "fe.warm_ratio>one"])
 
 
 # ---------------------------------------------------------------------------

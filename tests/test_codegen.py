@@ -38,6 +38,8 @@ SMALL = {
     "fw": dict(n=6),
     "sort": dict(n=16),
     "spmv": dict(n=12),
+    "pagerank": dict(n=12, n_edges=32, iters=2),
+    "join": dict(n_r=12, n_s=16, n_buckets=24),
 }
 
 COMPILERS = {"dae": pipeline.compile_dae, "spec": pipeline.compile_spec}

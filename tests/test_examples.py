@@ -41,6 +41,15 @@ def test_dae_speculation_demo(capsys):
     assert "ample capacity" in out
 
 
+def test_dae_frontend_demo(capsys, tmp_path, monkeypatch):
+    monkeypatch.setenv("DAE_CACHE_DIR", str(tmp_path))
+    _run("examples.dae_frontend_demo", ["demo"])
+    out = capsys.readouterr().out
+    assert "bit-identical to interp: True" in out
+    assert "outcome=cold" in out and "outcome=warm" in out
+    assert "hits=1" in out and "stale=0" in out
+
+
 def test_dae_codegen_demo(capsys):
     _run("examples.dae_codegen_demo", ["demo"])
     out = capsys.readouterr().out
