@@ -1,6 +1,10 @@
 # Repo-wide targets, mirroring the three CI tiers (see .github/workflows/
 # ci.yml and README.md):
 #   make lint        — ruff over src/tests/benchmarks (CI tier: lint)
+#   make verify      — standalone soundness verifier (repro.verify) over
+#                      every workload + 32-seed randprog sweep + negative
+#                      corpus + mutation testing, with the codegen
+#                      differential; budgeted at 30 s (CI tier: lint)
 #   make check       — full tier-1 pytest gate (~4 min on 2 vCPUs)
 #   make bench-quick — <60 s perf smoke; refreshes BENCH_quick.json
 #   make bench-gate  — quick run into BENCH_gate.json, diffed against the
@@ -18,10 +22,14 @@ TOLERANCE ?= 0.25
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: check bench-quick bench bench-gate chaos lint test
+.PHONY: check bench-quick bench bench-gate chaos lint test verify
 
 check test:
 	$(PY) -m pytest -x -q
+
+verify:
+	$(PY) -m repro.verify --all --randprog 32 --negative 8 --mutants \
+		--budget 30
 
 lint:
 	@$(PY) -m ruff --version >/dev/null 2>&1 || { \

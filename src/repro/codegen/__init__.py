@@ -113,13 +113,17 @@ class CodegenRun:
     #: how the CU executed: "vector" | "state-machine" | None (coupled)
     cu_mode: Optional[str] = None
     #: why the vectorised CU did not run (None when it did, or when the
-    #: whole target fell back before the CU mode was chosen)
+    #: whole target fell back before the CU mode was chosen).  Reason
+    #: strings lead with a ``repro.verify.rules`` rule ID
+    #: (``"V01-cu-not-uniform: ..."``) — parse with
+    #: :func:`repro.verify.rules.rule_of`, human text follows the tag.
     vector_reason: Optional[str] = None
     #: why segmented-scan RAW forwarding was refused (last refusal of the
     #: vector run; None when every hazarded epoch forwarded, when no
     #: epoch hazarded, or when the CU did not run vectorised).  A refusal
     #: is *not* a failure — the epoch degrades to the sound optimistic
     #: cut and, if even that stalls, the run descends the ladder.
+    #: Tagged ``"F01-forward-refused: ..."`` like ``vector_reason``.
     forward_reason: Optional[str] = None
     #: every retry/descend the degradation ladder observed on this run
     #: (:class:`~repro.resilience.ladder.FailureEvent`); empty on a

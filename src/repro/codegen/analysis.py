@@ -34,6 +34,10 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 
 from ..core.ir import Function
 from ..core.sim.compile import _BINOP_EXPR
+# one-way dependency: the classifier borrows the *rule registry* (stable
+# IDs for its reason strings) from the verifier; repro.verify's analysis
+# modules never import codegen (see docs/verify.md)
+from ..verify.rules import tag
 
 AGU_PURE = "pure-address"
 AGU_SYNC_SAFE = "sync-read-only"
@@ -121,10 +125,13 @@ def _op_check(fn: Function, slice_name: str) -> Optional[str]:
     for bname, blk in fn.blocks.items():
         for i in blk.body:
             if i.op not in SLICE_OPS:
-                return f"{slice_name} op {i.op!r} in {bname} not lowerable"
+                return tag("V05-op-not-lowerable",
+                           f"{slice_name} op {i.op!r} in {bname} "
+                           f"not lowerable")
             if i.op == "bin" and i.args[0] not in _BINOP_EXPR:
-                return (f"{slice_name} binop {i.args[0]!r} in {bname} "
-                        f"not lowerable")
+                return tag("V05-op-not-lowerable",
+                           f"{slice_name} binop {i.args[0]!r} in {bname} "
+                           f"not lowerable")
     return None
 
 
@@ -171,7 +178,7 @@ def analyze(compiled) -> SliceAnalysis:
                f"array(s) {', '.join(bad)}")
         if info.data_lod_mids:
             why += f" (data-LoD mids {info.data_lod_mids})"
-        info.stream_reason = why
+        info.stream_reason = tag("D01-agu-value-dependent", why)
     else:
         info.stream_reason = _op_check(agu, "AGU") or _op_check(cu, "CU")
 
@@ -209,6 +216,10 @@ def uniform_loops(fn: Function
     except AttributeError:
         pass
     res = _uniform_loops(fn)
+    if res[1] is not None:
+        # stable rule-ID prefix (repro.verify registry); the human text
+        # stays intact as the detail suffix
+        res = (None, tag("V01-cu-not-uniform", res[1]))
     fn._codegen_uniform = res  # type: ignore[attr-defined]
     return res
 

@@ -61,6 +61,7 @@ import numpy as np
 
 from ..resilience import faults
 from ..resilience.faults import FaultDetected
+from ..verify.rules import detail_of, tag
 from .analysis import CodegenError, UniformLoop, uniform_loops
 from .epochs import (I32_MAX as _I32_MAX, I32_MIN as _I32_MIN,
                      MAX_FWD_PASSES, bucket, combine_runs, first_violation,
@@ -94,9 +95,10 @@ def _int_arr(*xs) -> bool:
 
 
 def _overflow() -> "CodegenError":
-    return CodegenError(
+    return CodegenError(tag(
+        "V03-lane-overflow",
         "vector lane overflow: an intermediate exceeds int64 (the "
-        "state-machine emitters compute in unbounded Python ints)")
+        "state-machine emitters compute in unbounded Python ints)"))
 
 
 def _vadd(a, b):
@@ -341,9 +343,10 @@ class _VectorDriver:
         ul = self.loops[lid]
         m = plan_iters(remaining, ul.k_loads, ul.k_stores)
         if m <= 0:
-            raise CodegenError(
+            raise CodegenError(tag(
+                "V02-epoch-stalled",
                 "vector epoch cannot hold a single iteration "
-                "(per-iteration request count exceeds the batch bound)")
+                "(per-iteration request count exceeds the batch bound)"))
         return m
 
     def gather(self, lid: int, m: int) -> Dict[str, np.ndarray]:
@@ -356,7 +359,8 @@ class _VectorDriver:
             lp = self.lp[a]
             idx = self.np_ld[a][lp:lp + m * k]
             if len(idx) < m * k:
-                raise CodegenError(f"load stream underrun @{a}")
+                raise CodegenError(tag("V04-stream-underrun",
+                                       f"load stream underrun @{a}"))
             req[a] = idx
         return self._gather_all(req)
 
@@ -394,26 +398,29 @@ class _VectorDriver:
             if fwd is None:
                 self.fwd_refusals += 1
         elif self.fwd_reason is None:
-            self.fwd_reason = "forwarding disabled (forward=False)"
+            self.fwd_reason = tag("F01-forward-refused",
+                                  "forwarding disabled (forward=False)")
 
         if fwd is None:
             # sound fallback: cut at the first committed RAW hazard
             if m2 == 0:
                 extra = (f" — forwarding refused: {self.fwd_reason}"
                          if self.fwd_reason else "")
-                raise CodegenError(
+                raise CodegenError(tag(
+                    "V02-epoch-stalled",
                     "vector epoch stalled: a load aliases a committed "
                     "store of the same iteration (un-vectorisable RAW)"
-                    + extra)
+                    + extra))
             self._commit_window(ul, m2, flat, {})
             return m2, locs
 
         flat_f, locs_f, deltas_f, m2f = fwd
         if m2f == 0:
-            raise CodegenError(
+            raise CodegenError(tag(
+                "V02-epoch-stalled",
                 "vector epoch stalled: a load aliases a committed store "
                 "of the same iteration (un-vectorisable RAW on a "
-                "non-forwardable array)")
+                "non-forwardable array)"))
         self.fwd_epochs += 1
         self._commit_window(ul, m2f, flat_f, deltas_f)
         return m2f, locs_f
@@ -442,7 +449,7 @@ class _VectorDriver:
             pflat, self.lp[a], self.sp[a])
 
     def _refuse(self, reason: str) -> None:
-        self.fwd_reason = reason
+        self.fwd_reason = tag("F01-forward-refused", reason)
         return None
 
     def _try_forward(self, ul: UniformLoop, m: int, body, ld0, flat0,
@@ -561,7 +568,8 @@ class _VectorDriver:
             sp = self.sp[a]
             addrs = self.np_st[a][sp:sp + n]
             if len(addrs) < n:
-                raise CodegenError(f"store stream underrun @{a}")
+                raise CodegenError(tag("V04-stream-underrun",
+                                       f"store stream underrun @{a}"))
             vals, pois = vflat[:n], pflat[:n]
             ok = ~pois
             oob = ok & ((addrs < 0) | (addrs > self.hi[a]))
@@ -771,8 +779,9 @@ class _JaxVectorDriver(_VectorDriver):
                 v64 = np.asarray(vals).astype(np.int64)
                 lo, hi = int(v64[ok].min()), int(v64[ok].max())
                 if lo < _I32_MIN or hi > _I32_MAX:
-                    raise CodegenError(
-                        f"jax target: store value outside int32 range @{a}")
+                    raise CodegenError(tag(
+                        "V03-lane-overflow",
+                        f"jax target: store value outside int32 range @{a}"))
                 eff = np.where(pois, -1, addrs)
                 keep = last_writer_keep(eff)
                 if not keep.any():
@@ -790,8 +799,9 @@ class _JaxVectorDriver(_VectorDriver):
                 fin = self.mirror[gi] + tot
                 if (int(fin.min()) < _I32_MIN
                         or int(fin.max()) > _I32_MAX):
-                    raise CodegenError(
-                        f"jax target: store value outside int32 range @{a}")
+                    raise CodegenError(tag(
+                        "V03-lane-overflow",
+                        f"jax target: store value outside int32 range @{a}"))
                 rows_i.append(gi)
                 rows_d.append(tot.astype(np.int32))
                 post.append(("add", gi, tot))
@@ -865,8 +875,12 @@ def run_vector(compiled, memory: Dict[str, np.ndarray],
     cu_make = compile_mode(compiled.cu, "cu-vector")
     if cu_make is None:
         loops, why = uniform_loops(compiled.cu)
-        raise CodegenError(
-            f"CU not iteration-uniform: {why or 'vector emission refused'}")
+        # ``why`` is already V01-tagged by uniform_loops; re-tag so the
+        # rule ID leads the composed message exactly once.
+        raise CodegenError(tag(
+            "V01-cu-not-uniform",
+            f"CU not iteration-uniform: "
+            f"{detail_of(why) or 'vector emission refused'}"))
     loops, _ = uniform_loops(compiled.cu)
 
     dec = sorted(set(streams.arrays) | set(analysis.decoupled))

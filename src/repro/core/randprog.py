@@ -24,10 +24,17 @@ class GenProgram:
     memory: Dict[str, np.ndarray]
     decoupled: Set[str]
     n_requests: int = 0
+    #: negative programs only: the ``repro.verify`` rule that must fire
+    expect_rule: str = ""
+    #: negative programs only: ``repro.verify.mutate`` kind to apply to
+    #: the *compiled* pair before verifying (named by string so this
+    #: module never imports ``repro.verify`` — core stays verify-free)
+    mutate: str = ""
 
 
 def generate(seed: int, n_iter: int = 48, max_depth: int = 3,
-             max_items: int = 3, assoc_chains: bool = False) -> GenProgram:
+             max_items: int = 3, assoc_chains: bool = False,
+             negative: bool = False) -> GenProgram:
     """One random single-loop program (seeded, deterministic).
 
     ``assoc_chains=True`` biases generation toward the reduction shape
@@ -36,7 +43,16 @@ def generate(seed: int, n_iter: int = 48, max_depth: int = 3,
     (``x = A[ix]; A[ix] = x + c``) and index arrays are drawn from a
     small range so same-address runs are long — heavy committed-RAW
     pressure with an associative escape hatch.
+
+    ``negative=True`` instead emits a *known-unsound* program for the
+    verifier's negative corpus: even seeds build an irreducible CFG
+    (a retreating edge into a two-entry loop — ``expect_rule`` C02, and
+    :class:`repro.core.cfg.CFGInfo` must refuse it too); odd seeds build
+    a speculation-guaranteed loop whose compiled pair is to be broken by
+    the named ``mutate`` kind (``drop-poison`` — ``expect_rule`` P02).
     """
+    if negative:
+        return _negative(seed, n_iter)
     rng = np.random.RandomState(seed)
     N = int(n_iter)
 
@@ -165,6 +181,68 @@ def generate(seed: int, n_iter: int = 48, max_depth: int = 3,
     f.verify()
 
     return GenProgram(f, mem, decoupled, n_req[0])
+
+
+def _negative(seed: int, n_iter: int) -> GenProgram:
+    """One known-unsound program (see ``generate(negative=True)``)."""
+    rng = np.random.RandomState(seed)
+    N = int(n_iter)
+    mem = {"A": rng.randint(-5, 12, N).astype(np.int64)}
+    c = int(rng.randint(2, 8))
+
+    if seed % 2 == 0:
+        # irreducible: entry branches into the middle of the b1<->b2
+        # cycle, so b2->b1 is a retreating edge that is not a back edge
+        f = Function(f"neg{seed}.irreducible")
+        f.array("A", N)
+        e = f.block("entry")
+        e.const("zero", 0)
+        e.const("one", 1)
+        e.const("N", N)
+        e.bin("c", "<", "zero", "N")
+        e.cbr("c", "b1", "b2")
+        b1 = f.block("b1")
+        b1.load("a", "A", "zero")
+        b1.br("b2")
+        b2 = f.block("b2")
+        b2.bin("t", "+", "zero", "one")
+        b2.cbr("c", "b1", "exit")
+        f.block("exit").ret()
+        f.verify()
+        return GenProgram(f, mem, {"A"},
+                          expect_rule="C02-irreducible-cfg")
+
+    # speculation-guaranteed loop: a decoupled load feeds the branch
+    # guarding a store, so the compiled CU must carry poison_st sites —
+    # dropping one leaves a store request no token ever resolves
+    f = Function(f"neg{seed}.dropguard")
+    f.array("A", N)
+    e = f.block("entry")
+    e.const("zero", 0)
+    e.const("one", 1)
+    e.const("N", N)
+    e.const("c", c)
+    e.br("header")
+    h = f.block("header")
+    h.phi("i", [("entry", "zero"), ("latch", "i_next")])
+    h.bin("cond", "<", "i", "N")
+    h.cbr("cond", "b0", "exit")
+    b0 = f.block("b0")
+    b0.load("a", "A", "i")
+    b0.bin("p", ">", "a", "c")
+    b0.cbr("p", "taken", "latch")
+    t = f.block("taken")
+    t.bin("v", "+", "a", "c")
+    t.store("A", "i", "v")
+    t.br("latch")
+    l = f.block("latch")
+    l.bin("i_next", "+", "i", "one")
+    l.br("header")
+    f.block("exit").ret()
+    f.verify()
+    return GenProgram(f, mem, {"A"}, n_requests=2 * N,
+                      expect_rule="P02-request-unresolved",
+                      mutate="drop-poison")
 
 
 def _pick_dec(rng, decoupled: Set[str]) -> str:

@@ -21,7 +21,13 @@ identity of the slices rather than the container):
   and recompiled cold — never silently reused;
 * bumping :data:`SCHEMA` (any change to the IR, the transforms, or the
   emitters that alters what a payload means) invalidates every entry,
-  because the stamp is inside the key.
+  because the stamp is inside the key;
+* the payload also carries the :mod:`repro.verify` **verdict** (rule
+  registry version + diag tuples), so ``compile(..., verify=True)``
+  warm hits replay the stored verdict instead of re-running the pass;
+  a verdict minted against an older
+  :data:`repro.verify.REGISTRY_VERSION` is stale like any other payload
+  drift.
 
 Cache roots: pass ``root=`` explicitly, or set ``DAE_CACHE_DIR`` and let
 :func:`resolve_cache` hand out a per-directory singleton; with neither,
@@ -73,14 +79,26 @@ class CompileCache:
 
     # -- the compile wrapper -------------------------------------------------
     def compile(self, program, fn, decoupled: Set[str], mode: str,
-                compiler: Callable[..., CompiledDAE]) -> CompiledDAE:
-        """Warm-or-cold compile ``program`` (already lowered to ``fn``)."""
+                compiler: Callable[..., CompiledDAE],
+                verify: bool = False) -> CompiledDAE:
+        """Warm-or-cold compile ``program`` (already lowered to ``fn``).
+
+        ``verify=True`` demands a soundness-clean
+        :mod:`repro.verify` verdict.  The verdict is computed once per
+        cold store and persisted in the payload; warm hits *replay* the
+        stored verdict (raising :class:`repro.verify.VerifyError` on
+        dirt) without re-running the pass.  A payload whose verdict was
+        minted against an older rule-registry version is treated as
+        stale — recorded as ``frontend.cache_stale`` and recompiled.
+        """
         key = self.key(program.signature(), decoupled, mode)
         dump = fn.dump()
-        comp, was_stale = self._load(key, dump)
+        comp, was_stale = self._load(key, dump, need_verdict=verify)
         if comp is not None:
             self.hits += 1
             comp.cache_stats = self._stats("warm", key)
+            if verify:
+                self._enforce(comp)
             return comp
         outcome = "stale" if was_stale else "cold"
         if not was_stale:
@@ -88,6 +106,8 @@ class CompileCache:
         comp = compiler(fn, decoupled)
         self._store(key, dump, comp)
         comp.cache_stats = self._stats(outcome, key)
+        if verify:
+            self._enforce(comp)
         return comp
 
     # -- store ---------------------------------------------------------------
@@ -104,6 +124,8 @@ class CompileCache:
         from ..codegen import AGU_VALUE_DEP
         from ..codegen.emit import emit_source
 
+        from .. import verify as verify_mod
+
         info = codegen.analyze(comp)  # attaches the _codegen_analysis memo
         sources: Dict[str, Optional[str]] = {
             "agu-stream": (None if info.agu_class == AGU_VALUE_DEP
@@ -111,15 +133,23 @@ class CompileCache:
         }
         for m in _EMIT_MODES[1:]:
             sources[m] = emit_source(comp.cu, m)  # memoises _codegen_uniform
+        # verdict rides in the payload (not the key): a registry bump
+        # makes the verdict stale without invalidating the whole entry
+        # namespace, and warm verify=True hits replay it for free
+        verdict = {"registry": verify_mod.REGISTRY_VERSION,
+                   "diags": [(d.rule, d.site, d.detail)
+                             for d in verify_mod.verify_compiled(comp)]}
+        comp._verify_verdict = verdict  # type: ignore[attr-defined]
         payload = {"schema": SCHEMA, "dump": dump,
-                   "compiled": comp, "sources": sources}
+                   "compiled": comp, "sources": sources,
+                   "verdict": verdict}
         tmp = self._path(key) + f".tmp.{os.getpid()}"
         with open(tmp, "wb") as fh:
             pickle.dump(payload, fh)
         os.replace(tmp, self._path(key))
 
     # -- load ----------------------------------------------------------------
-    def _load(self, key: str, expect_dump: str):
+    def _load(self, key: str, expect_dump: str, need_verdict: bool = False):
         """Returns ``(compiled_or_None, was_stale)``."""
         from ..codegen.emit import preload_source
 
@@ -133,7 +163,16 @@ class CompileCache:
                 raise _Stale(f"schema {payload.get('schema')!r} != {SCHEMA}")
             if payload.get("dump") != expect_dump:
                 raise _Stale("re-lowered IR differs from cached payload")
+            if need_verdict:
+                from ..verify import REGISTRY_VERSION
+                v = payload.get("verdict")
+                if not v or v.get("registry") != REGISTRY_VERSION:
+                    raise _Stale(
+                        f"verifier verdict "
+                        f"{'missing' if not v else 'v%r' % v.get('registry')}"
+                        f" != registry v{REGISTRY_VERSION}")
             comp = payload["compiled"]
+            comp._verify_verdict = payload.get("verdict")
             sources = payload["sources"]
         except Exception as e:  # corrupt pickle, bad schema, IR drift
             self.stale += 1
@@ -150,6 +189,17 @@ class CompileCache:
             preload_source(comp.agu if m == "agu-stream" else comp.cu,
                            m, src)
         return comp, False
+
+    # -- verification --------------------------------------------------------
+    def _enforce(self, comp: CompiledDAE) -> None:
+        """Replay the stored verdict; raise on soundness findings."""
+        from .. import verify as verify_mod
+
+        verdict = comp._verify_verdict  # type: ignore[attr-defined]
+        diags = [verify_mod.Diag(*t) for t in verdict["diags"]]
+        bad = verify_mod.soundness(diags)
+        if bad:
+            raise verify_mod.VerifyError(bad)
 
     # -- invalidation --------------------------------------------------------
     def clear(self) -> int:

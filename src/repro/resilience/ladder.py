@@ -47,6 +47,17 @@ class FailureEvent:
     retries: int   # retries already spent on this rung when this happened
     outcome: str   # "retry" | "descend" | "raise" (engine adds "failed")
 
+    @property
+    def rule(self) -> "str | None":
+        """Verify-registry rule ID leading ``cause``, when tagged.
+
+        Codegen refusal messages carry ``repro.verify.rules`` IDs
+        (``V01-cu-not-uniform: ...``); fault-injection causes do not, so
+        this returns ``None`` for them.
+        """
+        from ..verify.rules import rule_of
+        return rule_of(self.cause)
+
 
 class Ladder:
     """Run ``attempt(rung)`` down ``rungs`` with bounded retry per rung."""

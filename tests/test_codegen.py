@@ -1134,7 +1134,7 @@ def test_forwarding_off_matches_and_costs_more_epochs(target):
             assert r.cu_mode == "vector", r.vector_reason
             runs[fwd] = r
         assert runs[False].forward_reason == \
-            "forwarding disabled (forward=False)"
+            "F01-forward-refused: forwarding disabled (forward=False)"
         assert runs[False].stats["epochs"] >= \
             5 * runs[True].stats["epochs"], sname
         if target == "jax":

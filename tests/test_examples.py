@@ -54,7 +54,8 @@ def test_dae_codegen_demo(capsys):
     _run("examples.dae_codegen_demo", ["demo"])
     out = capsys.readouterr().out
     assert "bit-identical to interp: True" in out
-    assert "fallback: AGU is value-dependent" in out
+    assert "fallback: D01-agu-value-dependent" in out
+    assert "AGU is value-dependent" in out
     assert "pure-address" in out
     # the forwarding A/B ran: off scales with the run, on collapses
     assert "forward=False" in out and "forward=True" in out

@@ -483,3 +483,78 @@ def test_new_families_are_frontend_authored():
         src = inspect.getsource(mod)
         assert "frontend import dae" in src
         assert "f.block(" not in src and "core.ir import" not in src
+
+
+# ---------------------------------------------------------------------------
+# verify=True: verdicts ride the cache payload (PR 10, docs/verify.md)
+# ---------------------------------------------------------------------------
+
+
+def test_compile_verify_clean_cold_and_uncached():
+    dec = {"HT", "G"}
+    comp = _join_prog().compile(dec, cache=False, verify=True)
+    assert comp is not None
+    # and the source-level pass on the lowered nest
+    _join_prog().build(verify=True)
+
+
+def test_cache_warm_hit_replays_verdict_without_reverifying(
+        tmp_path, monkeypatch):
+    import repro.verify as verify_mod
+
+    cc = CompileCache(str(tmp_path))
+    dec = {"HT", "G"}
+    c1 = _join_prog().compile(dec, cache=cc, verify=True)
+    assert c1.cache_stats["outcome"] == "cold"
+    assert c1._verify_verdict["registry"] == verify_mod.REGISTRY_VERSION
+
+    def boom(*a, **k):
+        raise AssertionError("verifier re-ran on a warm hit")
+
+    monkeypatch.setattr(verify_mod, "verify_compiled", boom)
+    c2 = _join_prog().compile(dec, cache=cc, verify=True)
+    assert c2.cache_stats["outcome"] == "warm"
+    assert c2._verify_verdict["diags"] == c1._verify_verdict["diags"]
+
+
+def test_cache_stale_verdict_registry_recompiles(tmp_path):
+    cc = CompileCache(str(tmp_path))
+    dec = {"HT", "G"}
+    _join_prog().compile(dec, cache=cc, verify=True)
+    [name] = [n for n in os.listdir(tmp_path) if n.endswith(".pkl")]
+    path = os.path.join(str(tmp_path), name)
+    with open(path, "rb") as fh:
+        payload = pickle.load(fh)
+    payload["verdict"]["registry"] = 0  # verdict minted by an old registry
+    with open(path, "wb") as fh:
+        pickle.dump(payload, fh)
+    c = _join_prog().compile(dec, cache=cc, verify=True)
+    assert c.cache_stats["outcome"] == "stale"
+    evs = [e for e in cc.events if e.site == "frontend.cache_stale"]
+    assert evs and "registry" in evs[-1].cause
+    # without verify, the same drifted verdict is irrelevant: warm hit
+    with open(path, "rb") as fh:
+        payload = pickle.load(fh)
+    payload["verdict"]["registry"] = 0
+    with open(path, "wb") as fh:
+        pickle.dump(payload, fh)
+    assert _join_prog().compile(dec, cache=cc).cache_stats["outcome"] \
+        == "warm"
+
+
+def test_compile_verify_raises_on_dirty_verdict(tmp_path):
+    import repro.verify as verify_mod
+
+    cc = CompileCache(str(tmp_path))
+    dec = {"HT", "G"}
+    _join_prog().compile(dec, cache=cc, verify=True)
+    [name] = [n for n in os.listdir(tmp_path) if n.endswith(".pkl")]
+    path = os.path.join(str(tmp_path), name)
+    with open(path, "rb") as fh:
+        payload = pickle.load(fh)
+    payload["verdict"]["diags"] = [
+        ("P02-request-unresolved", "cu:latch", "planted for the test")]
+    with open(path, "wb") as fh:
+        pickle.dump(payload, fh)
+    with pytest.raises(verify_mod.VerifyError, match="P02"):
+        _join_prog().compile(dec, cache=cc, verify=True)

@@ -1,0 +1,344 @@
+"""The standalone soundness verifier (`repro.verify`) — see docs/verify.md.
+
+Four gates ride here:
+
+* **independence** — the verifier's analysis modules must never import
+  ``repro.codegen`` (scanned from source), so the second opinion cannot
+  inherit the classifier's bugs;
+* **differential** — every workload and a 32-seed randprog sweep must be
+  soundness-clean AND agree with the codegen classifier in both
+  directions (schedule verdicts, forwarding-chain slots);
+* **mutation testing** — every seeded soundness mutant must be caught by
+  exactly its expected rule (a survivor is a verifier hole);
+* **reason tagging** — ``CodegenRun`` reason strings and
+  ``FailureEvent.cause`` lead with registry rule IDs.
+"""
+import os
+import re
+
+import numpy as np
+import pytest
+
+import repro.verify as verify
+from repro.bench_irregular import ALL
+from repro.core import pipeline, randprog
+from repro.core.cfg import CFGInfo
+from repro.core.ir import Function, Instr
+from repro.verify import mutate, rules
+from repro.verify.__main__ import differential, main as verify_main
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src", "repro", "verify")
+
+
+# ---------------------------------------------------------------------------
+# rule registry + Diag plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_registry_ids_are_well_formed():
+    assert rules.REGISTRY_VERSION == 1
+    for rid, precond in rules.RULES.items():
+        assert re.fullmatch(r"[CPDVFX]\d{2}-[a-z0-9-]+", rid), rid
+        assert precond.strip()
+    assert rules.SCHEDULE_RULES < set(rules.RULES)
+
+
+def test_diag_rejects_unknown_rule():
+    with pytest.raises(KeyError):
+        rules.Diag("Z99-not-a-rule", "cu", "nope")
+    d = rules.Diag("P01-poison-escapes-commit", "cu:b0", "detail text")
+    assert str(d) == "P01-poison-escapes-commit @cu:b0: detail text"
+
+
+def test_tag_round_trip():
+    s = rules.tag("V02-epoch-stalled", "vector epoch stalled: RAW")
+    assert rules.rule_of(s) == "V02-epoch-stalled"
+    assert rules.detail_of(s) == "vector epoch stalled: RAW"
+    assert "stalled" in s  # the human text stays a substring
+    assert rules.rule_of("plain untagged reason") is None
+    assert rules.detail_of("plain untagged reason") == "plain untagged reason"
+    assert rules.rule_of(None) is None
+    with pytest.raises(KeyError):
+        rules.tag("Z99-nope", "x")
+
+
+def test_soundness_filter_excludes_schedule_rules():
+    d01 = rules.Diag("D01-agu-value-dependent", "agu", "legal but coupled")
+    p02 = rules.Diag("P02-request-unresolved", "cu:b", "wedged")
+    assert verify.soundness([d01, p02]) == [p02]
+
+
+# ---------------------------------------------------------------------------
+# independence: the analysis modules never import codegen
+# ---------------------------------------------------------------------------
+
+
+def test_import_boundary_pins_independence():
+    analysis_modules = ["rules.py", "poisonflow.py", "decoupling.py",
+                        "mutate.py", "__init__.py"]
+    offenders = []
+    for name in analysis_modules:
+        with open(os.path.join(SRC, name)) as fh:
+            for ln, line in enumerate(fh, 1):
+                code = line.split("#", 1)[0]
+                if re.match(r"\s*(import|from)\s+[\w.]*\bcodegen\b", code):
+                    offenders.append(f"{name}:{ln}: {line.strip()}")
+    assert not offenders, (
+        "verifier analysis modules import codegen (independence broken):\n"
+        + "\n".join(offenders))
+    # ... and the CLI driver is allowed to (the differential needs it)
+    with open(os.path.join(SRC, "__main__.py")) as fh:
+        assert "codegen" in fh.read()
+
+
+# ---------------------------------------------------------------------------
+# differential: workloads + randprog sweep, both directions
+# ---------------------------------------------------------------------------
+
+
+def _compiled(name):
+    case = ALL[name]()
+    return pipeline.compile_spec(case.fn, case.decoupled), case.memory
+
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_workload_verifies_clean_and_matches_classifier(name):
+    comp, memory = _compiled(name)
+    diags, splits = differential(comp, memory)
+    assert not verify.soundness(diags), [str(d) for d in diags]
+    assert not splits, [str(d) for d in splits]
+
+
+def test_randprog_sweep_differential():
+    for kw in ({}, {"assoc_chains": True}):
+        for seed in range(32):
+            g = randprog.generate(seed, **kw)
+            comp = pipeline.compile_spec(g.fn, g.decoupled)
+            diags, splits = differential(comp, g.memory)
+            assert not verify.soundness(diags), (seed, kw, diags)
+            assert not splits, (seed, kw, [str(d) for d in splits])
+
+
+def test_cli_runs_clean():
+    assert verify_main(["--all", "--randprog", "8", "--negative", "4"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# mutation testing: the verifier has teeth
+# ---------------------------------------------------------------------------
+
+
+def test_every_mutant_is_caught_by_its_expected_rule():
+    caught_kinds = set()
+    survivors = []
+    for name in sorted(ALL):
+        comp, memory = _compiled(name)
+        for kind, rule, ok in mutate.check_mutants(comp, memory):
+            caught_kinds.add(kind) if ok else survivors.append((name, kind,
+                                                                rule))
+    assert not survivors, f"mutants the verifier missed: {survivors}"
+    # the acceptance bar: at least 8 distinct soundness breaks proven
+    assert len(caught_kinds) >= 8, sorted(caught_kinds)
+
+
+def _steered_pair():
+    """A hand-built AGU/CU pair with a pred_reg-steered END poison.
+
+    The benchmark compiles never produce steering (their spec heads
+    dominate every poison edge), so P03's material is built by hand: the
+    store request is hoisted (sent unconditionally in ``body``), the CU
+    commits on the ``spec`` arm and fires a flag-guarded latch poison on
+    the ``skip`` arm — the Fig. 4 steering discipline in miniature.
+    """
+    agu = Function("steer.agu")
+    agu.array("A", 8)
+    e = agu.block("entry")
+    e.const("zero", 0)
+    e.const("one", 1)
+    e.const("N", 8)
+    e.br("header")
+    h = agu.block("header")
+    h.phi("i", [("entry", "zero"), ("latch", "i_next")])
+    h.bin("cond", "<", "i", "N")
+    h.cbr("cond", "body", "exit")
+    b = agu.block("body")
+    b.body.append(Instr("send_ld", None, ("i",), "A",
+                        {"mid": 0, "sync": False}))
+    b.body.append(Instr("send_st", None, ("i",), "A", {"mid": 1}))
+    b.br("latch")
+    l = agu.block("latch")
+    l.bin("i_next", "+", "i", "one")
+    l.br("header")
+    agu.block("exit").ret()
+    agu.verify()
+
+    cu = Function("steer.cu")
+    cu.array("A", 8)
+    e = cu.block("entry")
+    e.const("zero", 0)
+    e.const("one", 1)
+    e.const("N", 8)
+    e.const("c", 3)
+    e.br("header")
+    h = cu.block("header")
+    h.phi("i", [("entry", "zero"), ("latch", "i_next")])
+    h.body.append(Instr("setreg", None, ("steer.x",), None, {"imm": 0}))
+    h.bin("cond", "<", "i", "N")
+    h.cbr("cond", "body", "exit")
+    b = cu.block("body")
+    b.body.append(Instr("consume_ld", "av", (), "A", {"mid": 0}))
+    b.bin("p", "<", "av", "c")
+    b.cbr("p", "spec", "skip")
+    s = cu.block("spec")
+    s.bin("v", "+", "av", "c")
+    s.body.append(Instr("produce_st", None, ("v",), "A", {"mid": 1}))
+    s.br("join")
+    k = cu.block("skip")
+    k.body.append(Instr("setreg", None, ("steer.x",), None, {"imm": 1}))
+    k.br("join")
+    j = cu.block("join")
+    j.br("latch")
+    l = cu.block("latch")
+    l.body.append(Instr("poison_st", None, (), "A",
+                        {"mid": 1, "poison": True, "pred_reg": "steer.x"}))
+    l.bin("i_next", "+", "i", "one")
+    l.br("header")
+    cu.block("exit").ret()
+    cu.verify()
+
+    class Pair:
+        pass
+
+    pair = Pair()
+    pair.agu, pair.cu = agu, cu
+    return pair
+
+
+def test_steered_pair_is_clean():
+    assert verify.verify_compiled(_steered_pair()) == []
+
+
+def test_steer_mutants_caught_by_p03():
+    results = dict((kind, (rule, ok)) for kind, rule, ok
+                   in mutate.check_mutants(_steered_pair()))
+    for kind in ("drop-steer-reset", "drop-steer-set"):
+        rule, ok = results[kind]
+        assert rule == "P03-steer-discipline"
+        assert ok, f"{kind} survived"
+
+
+def test_mutants_carry_expected_rule_not_just_any():
+    # a P02 mutant must be reported as P02, not merely *something*
+    comp, memory = _compiled("hist")
+    for kind, mut, rule in mutate.mutants(comp):
+        diags = verify.verify_compiled(mut, memory)
+        assert any(d.rule == rule for d in diags), (
+            kind, rule, [str(d) for d in diags])
+
+
+# ---------------------------------------------------------------------------
+# negative corpus + the irreducible-CFG error path
+# ---------------------------------------------------------------------------
+
+
+def test_negative_randprog_corpus():
+    import random
+    for seed in range(8):
+        g = randprog.generate(seed, negative=True)
+        assert g.expect_rule
+        if g.mutate:
+            comp = pipeline.compile_spec(g.fn, g.decoupled)
+            m = mutate._clone(comp)
+            assert mutate._APPLY[g.mutate](m, random.Random(seed))
+            diags = verify.verify_compiled(m, g.memory)
+        else:
+            diags = verify.verify_function(g.fn)
+        assert any(d.rule == g.expect_rule for d in diags), (
+            seed, g.expect_rule, [str(d) for d in diags])
+
+
+def test_irreducible_cfg_error_path_is_pinned():
+    g = randprog.generate(0, negative=True)  # even seed: irreducible
+    # the core CFG layer refuses with the canonical message ...
+    with pytest.raises(ValueError, match="irreducible CFG: retreating edge"):
+        CFGInfo(g.fn)
+    # ... the verifier maps it to C02 ...
+    [d] = verify.verify_function(g.fn)
+    assert d.rule == "C02-irreducible-cfg"
+    assert "node splitting" in d.detail
+    # ... and the compile pipeline (codegen side) refuses it too
+    with pytest.raises(ValueError, match="irreducible"):
+        pipeline.compile_spec(g.fn, g.decoupled)
+
+
+# ---------------------------------------------------------------------------
+# reason strings carry rule IDs
+# ---------------------------------------------------------------------------
+
+
+def test_reason_strings_lead_with_rule_ids():
+    from repro import codegen
+
+    # D01: a value-dependent AGU's stream refusal
+    g = next(randprog.generate(s) for s in (18,))  # known value-dep seed
+    comp = pipeline.compile_spec(g.fn, g.decoupled)
+    info = codegen.analyze(comp)
+    if info.stream_reason is not None:
+        assert rules.rule_of(info.stream_reason) in (
+            "D01-agu-value-dependent", "V05-op-not-lowerable")
+
+    # V01: the uniformity classifier's refusal (human text intact)
+    from repro.core.ir import LoopNest
+    f = Function("steered")
+    f.array("A", 8)
+    nest = LoopNest(f)
+    b = nest.enter("i", nest.const(8, "N"))
+    b.body.append(Instr("consume_ld", "av", (), "A", {}))
+    b.body.append(Instr("poison_st", None, (), "A",
+                        {"poison": True, "pred_reg": "steer.x"}))
+    b.br(nest.latch)
+    nest.finish()
+    loops, why = codegen.analysis.uniform_loops(f)
+    assert loops is None
+    assert rules.rule_of(why) == "V01-cu-not-uniform"
+    assert "steered poison" in why
+
+    # F01: a forced forwarding refusal on a real run
+    case = ALL["hist"]()
+    comp = pipeline.compile_spec(case.fn, case.decoupled)
+    mem = {k: v.copy() for k, v in case.memory.items()}
+    r = codegen.run(comp, mem, case.params, cu_mode="vector", forward=False)
+    assert rules.rule_of(r.forward_reason) == "F01-forward-refused"
+    assert rules.detail_of(r.forward_reason) == \
+        "forwarding disabled (forward=False)"
+
+
+def test_failure_event_rule_property():
+    from repro.resilience.ladder import FailureEvent
+
+    ev = FailureEvent(site="", rung="vector",
+                      cause=rules.tag("V02-epoch-stalled", "stalled"),
+                      retries=0, outcome="descend")
+    assert ev.rule == "V02-epoch-stalled"
+    raw = FailureEvent(site="x", rung="vector", cause="untagged fault",
+                       retries=0, outcome="retry")
+    assert raw.rule is None
+
+
+def test_vector_reason_is_tagged_on_fallback():
+    from repro import codegen
+
+    # the steered CU refuses vector mode; run through codegen.run via a
+    # pair that the ladder must descend on is heavyweight, so check the
+    # raise site directly instead
+    from repro.codegen.vector import run_vector
+    from repro.codegen import CodegenError
+
+    pair = _steered_pair()
+    mem = {"A": np.arange(8, dtype=np.int64)}
+    streams = None
+    with pytest.raises(CodegenError) as ei:
+        run_vector(pair, mem, {}, streams, codegen.analyze(pair), "numpy")
+    assert rules.rule_of(str(ei.value)) == "V01-cu-not-uniform"
+    assert "not iteration-uniform" in str(ei.value)
